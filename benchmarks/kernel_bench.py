@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-path wall
+time only; TPU perf comes from the roofline analysis, not these timings)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_benchmarks() -> list[str]:
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    rows = []
+
+    B, K, G, S, D = 1, 2, 2, 256, 64
+    q = jax.random.normal(ks[0], (B, K, G, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, S, D), jnp.float32)
+    us = _time(lambda a, b, c: ops.flash_attention_bkgsd(a, b, c), q, k, v)
+    flops = 4 * B * K * G * S * S * D
+    rows.append(f"kernel_flash_attention,{us:.0f},shape=({B}x{K}x{G}x{S}x{D})|flops={flops:.2e}")
+
+    B, S, H, P, N = 1, 256, 4, 32, 16
+    xh = jax.random.normal(ks[3], (B, S, H, P))
+    ll = -jax.nn.softplus(jax.random.normal(ks[4], (B, S, H)))
+    Bm = jax.random.normal(ks[5], (B, S, N))
+    Cm = jax.random.normal(ks[6], (B, S, N))
+    us = _time(lambda *a: ops.ssd_scan(*a)[0], xh, ll, Bm, Cm)
+    rows.append(f"kernel_ssd_scan,{us:.0f},shape=({B}x{S}x{H}x{P}x{N})")
+
+    B, S, H, N = 1, 128, 2, 32
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    kk = jax.random.normal(ks[1], (B, S, H, N))
+    vv = jax.random.normal(ks[2], (B, S, H, N))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, N))) * 0.9 + 0.05
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    us = _time(lambda *a: ops.rwkv6_scan(*a)[0], r, kk, vv, w, u)
+    rows.append(f"kernel_rwkv6_scan,{us:.0f},shape=({B}x{S}x{H}x{N})")
+
+    T, E, C, D2 = 256, 4, 64, 64
+    disp = jax.nn.one_hot(jax.random.randint(ks[5], (T,), 0, E), E)[:, :, None] * (
+        jax.nn.one_hot(jnp.arange(T) % C, C)[:, None, :]
+    )
+    x = jax.random.normal(ks[6], (T, D2))
+    us = _time(lambda a, b: ops.moe_dispatch(a, b), disp.astype(jnp.float32), x)
+    rows.append(f"kernel_moe_dispatch,{us:.0f},shape=({T}x{E}x{C})")
+
+    bufs = jax.random.normal(ks[7], (8, 4096))
+    us = _time(lambda a: ops.ccu_reduce(a), bufs)
+    rows.append(f"kernel_ccu_reduce,{us:.0f},shape=(8x4096)")
+    return rows

@@ -1,0 +1,264 @@
+"""One benchmark per paper table/figure (UB-Mesh §6).
+
+Each function returns (derived_dict, reference_dict) — computed numbers next
+to the paper's published values — and run.py times it and emits CSV.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import alltoall, apr, availability, capex, cost_model, multiring
+from repro.core import simulator, topology, traffic
+from repro.core.cost_model import Routing
+from repro.core.planner import best_parallel_spec
+from repro.core.traffic import ParallelSpec, WorkloadSpec
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — traffic analysis
+# ---------------------------------------------------------------------------
+
+
+def table1_traffic():
+    w, p = traffic.moe_2t_workload()
+    tab = traffic.analyze_traffic(w, p)
+    derived = {f"{t}_share": round(tab.share(t), 4) for t in ("TP", "SP", "EP", "PP", "DP")}
+    derived["local_share"] = round(tab.local_share(), 4)
+    ref = {f"{k}_share": v["share"] for k, v in traffic.PAPER_TABLE1.items()}
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — link-type usage
+# ---------------------------------------------------------------------------
+
+
+def table2_links():
+    sp = topology.SuperPod()
+    cb = sp.cables_by_link_type(uplink_provisioning=0.25)
+    tot = sum(cb.values())
+    derived = {k: round(v / tot, 4) for k, v in cb.items()}
+    ref = {
+        "passive_electrical": 0.867,
+        "active_electrical": 0.072,
+        "optical_100m": 0.048,
+        "optical_1km": 0.012,
+    }
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Fig. 17 — intra-rack architecture comparison (8K SuperPod)
+# ---------------------------------------------------------------------------
+
+_MODELS = {
+    "LLAMA2-70B": WorkloadSpec("LLAMA2-70B", 80, 8192, 64, 128, 8,
+                               seq_len=32768, global_batch=512, params_total=7e10),
+    "GPT3-175B": WorkloadSpec("GPT3-175B", 96, 12288, 96, 128, 8,
+                              seq_len=32768, global_batch=512, params_total=175e9),
+    "Dense-1T": WorkloadSpec("Dense-1T", 128, 24576, 128, 192, 8,
+                             seq_len=32768, global_batch=512, params_total=1e12),
+    "GPT4-2T": WorkloadSpec("GPT4-2T", 96, 12288, 96, 128, 8,
+                            seq_len=32768, global_batch=512, params_total=2e12,
+                            n_experts=16, topk=2),
+    "MoE-10T": WorkloadSpec("MoE-10T", 128, 18432, 144, 128, 8,
+                            seq_len=32768, global_batch=512, params_total=1e13,
+                            n_experts=32, topk=2, moe_param_frac=0.9),
+}
+
+
+# paper-faithful fixed parallelizations (the paper compares topologies at a
+# FIXED parallelization; letting the planner re-optimize per variant hides
+# the topology effect)
+_FIXED_SPEC = {
+    "LLAMA2-70B": ParallelSpec(tp=8, sp=8, pp=4, dp=256, microbatches=16),
+    "GPT3-175B": ParallelSpec(tp=8, sp=8, pp=8, dp=128, microbatches=16),
+    "Dense-1T": ParallelSpec(tp=8, sp=8, pp=16, dp=64, microbatches=32),
+    "GPT4-2T": ParallelSpec(tp=8, sp=8, pp=16, dp=64, ep=8, microbatches=32),
+    "MoE-10T": ParallelSpec(tp=8, sp=8, pp=32, dp=32, ep=16, microbatches=32),
+}
+
+
+def _throughput(w, comm, chips=8192, planned=False):
+    if planned or w.name not in _FIXED_SPEC:
+        spec = best_parallel_spec(w, chips, comm)
+    else:
+        spec = _FIXED_SPEC[w.name]
+    return simulator.simulate(w, spec, comm).tokens_per_s
+
+
+def fig17_intra_rack():
+    derived = {}
+    for name, w in _MODELS.items():
+        clos = _throughput(w, simulator.intra_rack_comm_model("Clos"))
+        for variant in ("2D-FM", "1D-FM-A", "1D-FM-B"):
+            tput = _throughput(w, simulator.intra_rack_comm_model(variant))
+            derived[f"{name}/{variant}"] = round(tput / clos, 4)
+    # the paper averages sequence lengths up to 10M, where TP*SP spills
+    # beyond the rack (the regime that opens the 4-7% gap); one long-seq
+    # point makes that regime visible
+    w_long = replace(_MODELS["GPT4-2T"], seq_len=524288, global_batch=64)
+    spec = ParallelSpec(tp=8, sp=32, pp=16, dp=4, ep=8, microbatches=16)
+    t_clos = simulator.simulate(
+        w_long, spec, simulator.intra_rack_comm_model("Clos")
+    ).tokens_per_s
+    t_fm = simulator.simulate(
+        w_long, spec, simulator.intra_rack_comm_model("2D-FM")
+    ).tokens_per_s
+    derived["GPT4-2T-seq512K/2D-FM"] = round(t_fm / t_clos, 4)
+    ref = {"2D-FM_vs_Clos": "0.932..0.959 (paper, seq 8K..10M avg)"}
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Fig. 19 — inter-rack routing strategies
+# ---------------------------------------------------------------------------
+
+
+def fig19_inter_rack():
+    derived = {}
+    for name in ("GPT3-175B", "GPT4-2T"):
+        w = _MODELS[name]
+        clos = _throughput(w, simulator.inter_rack_comm_model("Clos"))
+        for strat in ("Shortest", "Detour", "Borrow"):
+            t = _throughput(w, simulator.inter_rack_comm_model(strat))
+            derived[f"{name}/{strat}"] = round(t / clos, 4)
+    ref = {
+        "GPT4-2T/Shortest": 1 - 0.0073,
+        "GPT4-2T/Detour+Borrow": 1 - 0.0046,
+    }
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Fig. 20 — inter-rack bandwidth sweep
+# ---------------------------------------------------------------------------
+
+
+def fig20_bandwidth():
+    derived = {}
+    for seq, label in ((16384, "seq8-32K"), (262144, "seq64K-10M")):
+        w = replace(_MODELS["GPT3-175B"], seq_len=seq,
+                    global_batch=max(64, 2048 * 8192 // seq))
+        base = None
+        for lanes in (4, 8, 16, 32):
+            comm = cost_model.build_comm_model(
+                multi_pod=True, routing=Routing.DETOUR, inter_rack_lanes=lanes
+            )
+            t = _throughput(w, comm, planned=True)
+            if base is None:
+                base = t
+            derived[f"{label}/x{lanes}"] = round(t / base, 4)
+    ref = {"optimal8-32K": "x16", "optimal64K-10M": "x32 (+1.85% over x16)"}
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Fig. 21 — CapEx + cost-efficiency
+# ---------------------------------------------------------------------------
+
+
+def fig21_capex():
+    rows = capex.compare_architectures(8192)
+    ub = next(r for r in rows if "UB-Mesh" in r.name)
+    clos = next(r for r in rows if "x64T" in r.name)
+    ub_bom = capex.ub_mesh_bom(8192)
+    derived = {
+        "capex_ratio_clos_vs_ubmesh": round(clos.capex / ub.capex, 3),
+        "network_share_ubmesh": round(ub_bom.network_share(), 3),
+        "network_share_clos": round(capex.clos_bom(8192).network_share(), 3),
+        "cost_efficiency_gain": round(
+            ub.cost_efficiency / clos.cost_efficiency, 3
+        ),
+        "opex_reduction": round(1 - ub.opex / clos.opex, 3),
+    }
+    for r in rows:
+        derived[f"capex[{r.name}]"] = round(r.capex / ub.capex, 3)
+    ref = {
+        "capex_ratio_clos_vs_ubmesh": 2.46,
+        "network_share_ubmesh": 0.20,
+        "network_share_clos": 0.67,
+        "cost_efficiency_gain": 2.04,
+        "opex_reduction": 0.35,
+    }
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Fig. 22 — linearity
+# ---------------------------------------------------------------------------
+
+
+def fig22_linearity():
+    derived = {}
+    cases = {
+        "LLAMA2-70B": (replace(_MODELS["LLAMA2-70B"], seq_len=262144, global_batch=16), 128),
+        "GPT3-175B": (replace(_MODELS["GPT3-175B"], seq_len=262144, global_batch=64), 512),
+        "GPT4-2T": (replace(_MODELS["GPT4-2T"], seq_len=262144, global_batch=64), 1024),
+    }
+    for name, (w, base) in cases.items():
+        lin = simulator.linearity_curve(w, base, [1, 4, 16, 64])
+        for k, v in lin.items():
+            derived[f"{name}/x{k}"] = round(v, 4)
+    ref = {"all@64x": ">= 0.95 (paper)"}
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# Table 6 — MTBF / availability
+# ---------------------------------------------------------------------------
+
+
+def table6_mtbf():
+    ub, clos = availability.PAPER_UB_MESH, availability.PAPER_CLOS
+    ub_d, clos_d = availability.derived_afr(8192)
+    derived = {
+        "ubmesh_mtbf_h": round(ub.mtbf_hours, 1),
+        "clos_mtbf_h": round(clos.mtbf_hours, 1),
+        "mtbf_gain": round(ub.mtbf_hours / clos.mtbf_hours, 2),
+        "ubmesh_avail": round(ub.availability(availability.PAPER_MTTR_HOURS), 4),
+        "clos_avail": round(clos.availability(availability.PAPER_MTTR_HOURS), 4),
+        "ubmesh_avail_fast_mttr": round(
+            ub.availability(availability.FAST_MTTR_HOURS), 4
+        ),
+        "derived_ubmesh_afr": round(ub_d.total, 1),
+        "derived_clos_afr": round(clos_d.total, 1),
+    }
+    ref = {
+        "ubmesh_mtbf_h": 98.5,
+        "clos_mtbf_h": 13.8,
+        "mtbf_gain": 7.14,
+        "ubmesh_avail": 0.988,
+        "clos_avail": 0.916,
+        "ubmesh_avail_fast_mttr": 0.9978,
+    }
+    return derived, ref
+
+
+# ---------------------------------------------------------------------------
+# §3.3.2 — 64+1 backup analysis (supplementary)
+# ---------------------------------------------------------------------------
+
+
+def backup_64plus1():
+    b = availability.BackupAnalysis()
+    derived = {
+        "capacity_loss_improvement": round(b.capacity_loss_improvement(), 1),
+        "redirect_extra_hops": b.redirected_path_penalty_hops(),
+    }
+    ref = {"redirect_extra_hops": 1}
+    return derived, ref
+
+
+ALL_BENCHMARKS = {
+    "table1_traffic": table1_traffic,
+    "table2_links": table2_links,
+    "fig17_intra_rack": fig17_intra_rack,
+    "fig19_inter_rack": fig19_inter_rack,
+    "fig20_bandwidth": fig20_bandwidth,
+    "fig21_capex": fig21_capex,
+    "fig22_linearity": fig22_linearity,
+    "table6_mtbf": table6_mtbf,
+    "backup_64plus1": backup_64plus1,
+}

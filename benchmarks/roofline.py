@@ -1,0 +1,117 @@
+"""Roofline report: aggregates results/dryrun/*.json into the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line "what would move the
+dominant term down".
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+ADVICE = {
+    ("compute",): "raise useful-FLOPs ratio: lighter remat policy, fuse "
+                  "attention (flash kernel), drop redundant weight re-gathers",
+    ("memory",): "cut HBM traffic: blocked (flash) attention removes the "
+                 "S^2 score materialization; bf16 master copies; fuse "
+                 "softmax/loss",
+    ("collective",): "cut wire bytes: ZeRO-1 reduce-scatter instead of "
+                     "all-reduce, bf16 payloads, hierarchical (multi-ring) "
+                     "schedule, batch weight gathers once per layer",
+}
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_row(r: dict) -> dict:
+    if r["status"] != "ok":
+        return {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": r["status"],
+            "note": r.get("reason", r.get("error", ""))[:70],
+        }
+    roof = r["roofline"]
+    dom = roof["bottleneck"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "status": "ok",
+        "compute_s": roof["compute_s"],
+        "memory_s": roof["memory_s"],
+        "collective_s": roof["collective_s"],
+        "bottleneck": dom,
+        "useful_flops": roof["useful_flops_ratio"],
+        "mem_gb": r["memory"]["peak_per_device_gb"],
+        "advice": ADVICE[(dom,)],
+    }
+
+
+def roofline_fraction(row: dict) -> float:
+    """Achievable fraction of the compute roofline: compute term over the
+    max term (1.0 = perfectly compute-bound at peak)."""
+    terms = [row["compute_s"], row["memory_s"], row["collective_s"]]
+    m = max(terms)
+    return row["compute_s"] / m if m > 0 else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+
+    rows = [fmt_row(r) for r in load_records()]
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh]
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    errored = [r for r in rows if r["status"] == "error"]
+
+    if args.markdown:
+        print("| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+              "| bottleneck | 6ND/HLO | mem GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                  f"| {r['collective_s']:.3e} | **{r['bottleneck']}** "
+                  f"| {r['useful_flops']:.2f} | {r['mem_gb']:.1f} |")
+        for r in sorted(skipped, key=lambda x: (x["arch"], x["shape"])):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                  f"| skipped | — | — |")
+    else:
+        print(f"{'arch':16s} {'shape':12s} {'mesh':10s} {'comp_s':>10s} "
+              f"{'mem_s':>10s} {'coll_s':>10s} {'bottleneck':>11s} "
+              f"{'6ND/HLO':>8s} {'GB/dev':>7s}")
+        for r in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+            print(f"{r['arch']:16s} {r['shape']:12s} {r['mesh']:10s} "
+                  f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+                  f"{r['collective_s']:10.3e} {r['bottleneck']:>11s} "
+                  f"{r['useful_flops']:8.2f} {r['mem_gb']:7.1f}")
+        for r in skipped:
+            print(f"{r['arch']:16s} {r['shape']:12s} {r['mesh']:10s} "
+                  f"SKIPPED: {r['note']}")
+        for r in errored:
+            print(f"{r['arch']:16s} {r['shape']:12s} {r['mesh']:10s} "
+                  f"ERROR: {r['note']}")
+    print(f"\n# ok={len(ok)} skipped={len(skipped)} error={len(errored)}")
+    if ok:
+        worst = min(ok, key=roofline_fraction)
+        coll = max(ok, key=lambda r: r["collective_s"] / max(r["compute_s"], 1e-12))
+        print(f"# worst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({roofline_fraction(worst):.3f})")
+        print(f"# most collective-bound: {coll['arch']}/{coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV; `derived` is `key=value|...` pairs
+of computed numbers with the paper's reference values interleaved as
+`ref:key=value` for direct comparison.  Kernel micro-benchmarks (interpret
+mode — CPU wall time, NOT TPU perf) are included for completeness.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _fmt(d: dict) -> str:
+    return "|".join(f"{k}={v}" for k, v in d.items())
+
+
+def main() -> None:
+    from benchmarks.paper_tables import ALL_BENCHMARKS
+
+    rows = []
+    failures = 0
+    for name, fn in ALL_BENCHMARKS.items():
+        t0 = time.perf_counter()
+        try:
+            derived, ref = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            payload = _fmt(derived)
+            if ref:
+                payload += "|" + _fmt({f"ref:{k}": v for k, v in ref.items()})
+            rows.append(f"{name},{us:.0f},{payload}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            rows.append(f"{name},0,ERROR={type(e).__name__}:{e}")
+    # kernel micro-benches (interpret mode)
+    try:
+        from benchmarks.kernel_bench import kernel_benchmarks
+
+        rows.extend(kernel_benchmarks())
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        rows.append(f"kernel_bench,0,ERROR={type(e).__name__}:{e}")
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

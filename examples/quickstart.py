@@ -1,0 +1,42 @@
+"""Quickstart: UB-Mesh topology, APR routing, and the parallelization
+planner in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import apr, cost_model, multiring, planner, topology
+from repro.core.cost_model import Routing
+from repro.core.traffic import WorkloadSpec
+
+# --- 1. build the paper's 4D-FullMesh pod (8x8 NPUs/rack, 4x4 racks) -------
+pod = topology.ub_mesh_pod()
+print(f"UB-Mesh-Pod: {pod.num_nodes} NPUs, shape {pod.shape}")
+print(f"per-NPU bandwidth: {pod.node_bandwidth_gbs():.0f} GB/s")
+print(f"cables: {pod.cables_by_link_type()}")
+
+# --- 2. All-Path Routing between two NPUs ----------------------------------
+src, dst = 0, pod.node_id((3, 5, 2, 1))
+paths = apr.all_paths(pod, src, dst)
+admissible = apr.tfc_admissible(pod, paths)
+print(f"\nAPR {src}->{dst}: {len(paths)} paths, "
+      f"{len(admissible)} TFC-admissible with 2 VLs, "
+      f"shortest = {pod.hop_distance(src, dst)} hops")
+hdr = apr.encode_path(pod, paths[0])
+print(f"source-routing header: {hdr.pack().hex()} (8 bytes)")
+
+# --- 3. Multi-Ring AllReduce planning ---------------------------------------
+plan = multiring.plan_multiring(pod, dim=0)
+print(f"\nMulti-Ring on the X clique: {len(plan.rings)} rings, "
+      f"{plan.utilization:.0%} of links used, "
+      f"{plan.effective_bandwidth_gbs():.0f} GB/s effective "
+      f"(single ring: {multiring.single_ring_bandwidth_gbs(pod, 0):.0f})")
+
+# --- 4. topology-aware parallelization (paper Fig. 15) ----------------------
+w = WorkloadSpec("LLAMA-70B", 80, 8192, 64, 128, 8,
+                 seq_len=8192, global_batch=1024, params_total=7e10)
+comm = cost_model.build_comm_model(multi_pod=True, routing=Routing.BORROW)
+for r in planner.plan(w, 8192, comm, top_k=3):
+    s = r.spec
+    print(f"planner: tp={s.tp} sp={s.sp} pp={s.pp} dp={s.dp} "
+          f"m={s.microbatches}  iter={r.iteration_s:.2f}s "
+          f"(comm {r.comm_s:.2f}s, bubble {r.bubble_s:.2f}s)")

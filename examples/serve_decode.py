@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + autoregressive decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import subprocess
+import sys
+
+for arch in ("granite-8b", "rwkv6-1.6b", "mixtral-8x22b"):
+    print(f"=== {arch} ===")
+    rc = subprocess.call([
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", arch, "--smoke",
+        "--batch", "2", "--prompt-len", "24", "--gen", "8",
+    ])
+    if rc:
+        sys.exit(rc)

@@ -1,0 +1,20 @@
+"""Design-space exploration: cost/availability/perf of UB-Mesh vs baselines
+(the paper's §6 in one script).
+
+    PYTHONPATH=src python examples/topology_explore.py
+"""
+
+from repro.core import availability, capex
+
+print("=== CapEx (8K NPUs, relative units) ===")
+for row in capex.compare_architectures(8192):
+    print(f"{row.name:22s} capex={row.capex:12.0f} opex={row.opex:12.0f} "
+          f"perf={row.performance:.3f} cost-eff={row.cost_efficiency*1e6:.2f}")
+
+print("\n=== Availability (Table 6) ===")
+for afr in (availability.PAPER_UB_MESH, availability.PAPER_CLOS):
+    print(f"{afr.name:8s} AFR={afr.total:6.1f}/yr MTBF={afr.mtbf_hours:6.1f}h "
+          f"avail={afr.availability(availability.PAPER_MTTR_HOURS):.4f}")
+ub = availability.PAPER_UB_MESH
+print(f"with fast fault location+migration (13 min MTTR): "
+      f"{ub.availability(availability.FAST_MTTR_HOURS):.4f}")

@@ -1,0 +1,17 @@
+"""End-to-end training example: a reduced granite-8b for a few hundred
+steps with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+
+import subprocess
+import sys
+
+cmd = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "granite-8b", "--smoke",
+    "--steps", "200", "--batch", "16", "--seq", "256",
+    "--ckpt-dir", "/tmp/ubmesh_example_ckpt", "--ckpt-every", "100",
+    "--compression", "bf16",
+]
+sys.exit(subprocess.call(cmd))

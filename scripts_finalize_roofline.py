@@ -1,0 +1,22 @@
+"""Regenerate the EXPERIMENTS.md roofline summary + append the markdown table."""
+import json, pathlib, subprocess, sys
+
+root = pathlib.Path("/root/repo")
+recs = [json.loads(f.read_text()) for f in sorted((root/"results/dryrun").glob("*.json"))]
+ok = [r for r in recs if r["status"] == "ok"]
+skipped = [r for r in recs if r["status"] == "skipped"]
+err = [r for r in recs if r["status"] == "error"]
+bn = {}
+for r in ok:
+    bn[r["roofline"]["bottleneck"]] = bn.get(r["roofline"]["bottleneck"], 0) + 1
+print(f"cells: ok={len(ok)} skipped={len(skipped)} error={len(err)}")
+print("bottlenecks:", bn)
+frac = lambda r: (r["roofline"]["compute_s"] / max(r["roofline"]["compute_s"], r["roofline"]["memory_s"], r["roofline"]["collective_s"]))
+ok_sorted = sorted(ok, key=frac)
+print("worst roofline fraction:", [(r['arch'], r['shape'], r['mesh'], round(frac(r),3)) for r in ok_sorted[:3]])
+print("best roofline fraction:", [(r['arch'], r['shape'], r['mesh'], round(frac(r),3)) for r in ok_sorted[-3:]])
+# append markdown table to a file
+out = subprocess.run([sys.executable, "-m", "benchmarks.roofline", "--markdown"],
+                     capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd=str(root))
+(root/"results/roofline_table.md").write_text(out.stdout)
+print("table written to results/roofline_table.md")

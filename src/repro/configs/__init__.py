@@ -1,0 +1,31 @@
+"""Architecture registry: one module per assigned arch (+ paper models).
+
+``load(arch_id, smoke=False)`` returns the Harness; ``ARCH_IDS`` lists all
+ten assigned architectures.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "granite_8b",
+    "phi4_mini_3_8b",
+    "granite_3_2b",
+    "starcoder2_7b",
+    "zamba2_1_2b",
+    "rwkv6_1_6b",
+    "mixtral_8x22b",
+    "dbrx_132b",
+    "whisper_base",
+    "paligemma_3b",
+]
+
+# pool ids use dashes
+CANONICAL = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def load(arch_id: str, smoke: bool = False):
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.get_harness(smoke=smoke)

@@ -1,0 +1,22 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64 — Mamba2 + shared attn blocks
+[arXiv:2411.15242; hf]."""
+
+from repro.models.api import HybridHarness
+from repro.models.hybrid import HybridConfig
+
+
+def get_harness(smoke: bool = False) -> HybridHarness:
+    if smoke:
+        cfg = HybridConfig(
+            name="zamba2-smoke", n_layers=4, d_model=128, n_heads=4,
+            n_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+            ssm_state=16, share_every=2,
+        )
+    else:
+        cfg = HybridConfig(
+            name="zamba2-1.2b", n_layers=38, d_model=2048, n_heads=32,
+            n_kv_heads=32, head_dim=64, d_ff=8192, vocab_size=32000,
+            ssm_state=64, share_every=6,
+        )
+    return HybridHarness("zamba2-1.2b", cfg)

@@ -1,0 +1,29 @@
+"""UB-Mesh core: the paper's contributions as composable modules.
+
+* topology    — nD-FullMesh graph + baselines (C1, C2)
+* ub          — Unified Bus lane budgeting (C2)
+* apr         — All-Path Routing: SR header, linear tables, TFC, direct
+                notification (C3, C4)
+* multiring   — Multi-Ring AllReduce planner (C5)
+* alltoall    — Multi-Path / hierarchical All2All analysis (C5)
+* cost_model  — topology-aware communication cost model (C6)
+* planner     — topology-aware parallelization search (C6)
+* traffic     — per-technique traffic accounting (Table 1)
+* capex       — CapEx/OpEx/cost-efficiency (Fig. 21)
+* availability— MTBF/availability + 64+1 backup analysis (Table 6)
+* simulator   — cluster-scale training simulation (Figs 17/19/20/22)
+"""
+
+from . import (  # noqa: F401
+    alltoall,
+    apr,
+    availability,
+    capex,
+    cost_model,
+    multiring,
+    planner,
+    simulator,
+    topology,
+    traffic,
+    ub,
+)

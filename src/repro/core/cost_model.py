@@ -1,0 +1,166 @@
+"""Topology-aware communication cost model (paper §5.2, step 2).
+
+Alpha-beta costs for every collective the training workloads emit, priced on
+the UB-Mesh topology: each logical mesh axis maps to a set of full-mesh
+dimensions with a concrete per-chip bandwidth (multi-ring effective BW for
+AllReduce-like ops, bottleneck-link BW for All2All), plus per-hop latency.
+
+The same model is used by
+* the parallelization planner (`core/planner.py`) to rank configs,
+* the training-iteration simulator (`core/simulator.py`) for Figs 17/19/20/22,
+* the roofline collective refinement in `benchmarks/roofline.py`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from enum import Enum
+
+from .topology import MeshView, NDFullMesh, production_mesh_view, ub_mesh_pod
+from .multiring import plan_multiring
+
+
+class Routing(str, Enum):
+    SHORTEST = "shortest"   # single shortest path / single ring
+    DETOUR = "detour"       # APR multi-ring / multi-path
+    BORROW = "borrow"       # detour + switch-plane bandwidth borrowing
+
+
+@dataclass(frozen=True)
+class AxisCost:
+    """Communication characteristics of one logical mesh axis."""
+
+    size: int
+    gbs_per_chip: float       # effective per-chip injection bandwidth
+    latency_s: float          # per step
+
+
+@dataclass(frozen=True)
+class CommModel:
+    """Cost model over named logical axes."""
+
+    axes: dict[str, AxisCost]
+    routing: Routing = Routing.DETOUR
+
+    # ---- primitive collectives (per-chip completion time, seconds) -------
+    def allreduce(self, axis: str, size_bytes: float) -> float:
+        a = self.axes[axis]
+        if a.size <= 1 or size_bytes <= 0:
+            return 0.0
+        wire = 2.0 * (a.size - 1) / a.size * size_bytes
+        steps = 2 * (a.size - 1)
+        return wire / (a.gbs_per_chip * 1e9) + steps * a.latency_s
+
+    def reduce_scatter(self, axis: str, size_bytes: float) -> float:
+        a = self.axes[axis]
+        if a.size <= 1 or size_bytes <= 0:
+            return 0.0
+        wire = (a.size - 1) / a.size * size_bytes
+        return wire / (a.gbs_per_chip * 1e9) + (a.size - 1) * a.latency_s
+
+    def all_gather(self, axis: str, size_bytes: float) -> float:
+        return self.reduce_scatter(axis, size_bytes)
+
+    def all_to_all(self, axis: str, size_bytes: float) -> float:
+        """Per-chip A2A of ``size_bytes`` total payload per chip."""
+        a = self.axes[axis]
+        if a.size <= 1 or size_bytes <= 0:
+            return 0.0
+        wire = (a.size - 1) / a.size * size_bytes
+        # multi-path A2A recovers full clique bandwidth; single path halves it
+        bw = a.gbs_per_chip if self.routing != Routing.SHORTEST else a.gbs_per_chip / 2
+        return wire / (bw * 1e9) + a.latency_s * 2
+
+    def p2p(self, axis: str, size_bytes: float) -> float:
+        a = self.axes[axis]
+        if size_bytes <= 0:
+            return 0.0
+        return size_bytes / (a.gbs_per_chip * 1e9) + a.latency_s
+
+    # ---- hierarchical collectives ----------------------------------------
+    def hierarchical_allreduce(
+        self, axes: list[str], size_bytes: float
+    ) -> float:
+        """Reduce-scatter up the hierarchy, all-reduce at the top, gather
+        back down — the Multi-Ring schedule across tiers (fast axes first).
+        """
+        if not axes:
+            return 0.0
+        if len(axes) == 1:
+            return self.allreduce(axes[0], size_bytes)
+        t = 0.0
+        frac = size_bytes
+        # scatter down fast->slow
+        for ax in axes[:-1]:
+            t += self.reduce_scatter(ax, frac)
+            frac /= self.axes[ax].size
+        t += self.allreduce(axes[-1], frac)
+        for ax in reversed(axes[:-1]):
+            frac *= self.axes[ax].size
+            t += self.all_gather(ax, frac)
+        return t
+
+
+def build_comm_model(
+    topo: NDFullMesh | None = None,
+    *,
+    multi_pod: bool = False,
+    routing: Routing = Routing.DETOUR,
+    borrow_gbs: float = 50.0,
+    inter_rack_lanes: int | None = None,
+) -> CommModel:
+    """CommModel for the production mesh mapped onto the UB-Mesh pod.
+
+    ``routing`` reproduces the §6.3 strategies:
+      * SHORTEST — single-ring / single-path (baseline Fig. 10-(a))
+      * DETOUR   — APR multi-ring & multi-path (full direct-link bandwidth)
+      * BORROW   — DETOUR + switch-plane bandwidth on the inter-rack axis
+    ``inter_rack_lanes`` rescales the Z/A allocation (Fig. 20 sweep).
+    """
+    topo = topo or ub_mesh_pod()
+    if inter_rack_lanes is not None:
+        per_peer = max(1, inter_rack_lanes // 8)  # split over 3+3 peers + HRS
+        dims = list(topo.dims)
+        dims[2] = replace(dims[2], lanes_per_peer=per_peer)
+        dims[3] = replace(dims[3], lanes_per_peer=per_peer)
+        topo = replace(topo, dims=tuple(dims))
+    view = production_mesh_view(topo, multi_pod=multi_pod)
+
+    def axis_bw(axis: str) -> float:
+        if axis == "pod":
+            return view.axis_gbs["pod"]
+        dims = view.axis_dims[axis]
+        if routing == Routing.SHORTEST:
+            # one ring per dimension only
+            bw = sum(
+                topo.dims[d].gbs_per_peer for d in dims
+            )
+        else:
+            bw = sum(
+                plan_multiring(topo, d).effective_bandwidth_gbs() for d in dims
+            )
+        if routing == Routing.BORROW and axis == "data":
+            bw += borrow_gbs
+        return bw
+
+    sizes = {"model": 16, "data": 16}
+    lat = view.axis_latency_us
+    axes = {
+        name: AxisCost(size, axis_bw(name), lat[name] * 1e-6)
+        for name, size in sizes.items()
+    }
+    if multi_pod:
+        axes["pod"] = AxisCost(2, view.axis_gbs["pod"], lat["pod"] * 1e-6)
+    return CommModel(axes=axes, routing=routing)
+
+
+def clos_comm_model(*, multi_pod: bool = False, gbs: float = 450.0) -> CommModel:
+    """Ideal non-oversubscribed Clos: full symmetric bandwidth everywhere."""
+    axes = {
+        "model": AxisCost(16, gbs, 2e-6),
+        "data": AxisCost(16, gbs, 2e-6),
+    }
+    if multi_pod:
+        axes["pod"] = AxisCost(2, gbs, 3e-6)
+    return CommModel(axes=axes, routing=Routing.SHORTEST)

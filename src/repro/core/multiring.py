@@ -1,0 +1,196 @@
+"""Multi-Ring AllReduce planner (paper §5.1, Fig. 13).
+
+In a full-mesh clique of ``n`` nodes a single ring uses only ``n`` of the
+``n(n-1)/2`` links — the rest idle.  The paper's Multi-Ring algorithm maps
+the AllReduce onto MANY edge-disjoint rings simultaneously ("ensuring
+exclusive path usage without traffic conflicts"), then *borrows* the links
+that are still idle via APR to carry overflow traffic.
+
+This module plans those rings:
+
+* odd  n: Walecki decomposition — (n-1)/2 edge-disjoint Hamiltonian cycles
+  covering EVERY clique link.
+* even n: zig-zag decomposition — n/2 edge-disjoint Hamiltonian paths
+  covering every link ("multi-chain"; a chain AllReduce has the same
+  asymptotic per-link traffic as a ring).
+
+Every decomposition is verified by construction (`verify=True` asserts
+edge-disjointness + full coverage), and the planner computes the effective
+per-chip AllReduce bandwidth the cost model uses.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .topology import NDFullMesh
+
+Ring = tuple[int, ...]   # cyclic order of nodes (cycle: implicit wrap) / path
+
+
+def _edges_of_cycle(cycle: Ring) -> set[tuple[int, int]]:
+    return {
+        tuple(sorted((cycle[i], cycle[(i + 1) % len(cycle)])))
+        for i in range(len(cycle))
+    }
+
+
+def _edges_of_path(path: Ring) -> set[tuple[int, int]]:
+    return {tuple(sorted(e)) for e in zip(path, path[1:])}
+
+
+def walecki_cycles(n: int) -> list[Ring]:
+    """Edge-disjoint Hamiltonian cycles of K_n for ODD n ((n-1)/2 of them).
+
+    Classical construction: hub vertex ``n-1``; the other ``n-1`` vertices sit
+    on a circle (Z_{n-1}); cycle k is the hub plus the zig-zag
+    k, k+1, k-1, k+2, k-2, ... rotated by k.
+    """
+    if n % 2 == 0:
+        raise ValueError("walecki_cycles needs odd n")
+    if n == 1:
+        return []
+    m = (n - 1) // 2
+    # zig-zag 0, 1, -1, 2, -2, ... over Z_{n-1}
+    zig = [0]
+    for j in range(1, n - 1):
+        k = (j + 1) // 2
+        zig.append(k if j % 2 == 1 else -k)
+    cycles = []
+    for k in range(m):
+        cyc = [n - 1] + [(k + z) % (n - 1) for z in zig]
+        cycles.append(tuple(cyc))
+    return cycles
+
+
+def zigzag_paths(n: int) -> list[Ring]:
+    """Edge-disjoint Hamiltonian paths of K_n for EVEN n (n/2 of them)."""
+    if n % 2 == 1:
+        raise ValueError("zigzag_paths needs even n")
+    m = n // 2
+    zig = [0]
+    for j in range(1, n):
+        k = (j + 1) // 2
+        zig.append(k if j % 2 == 1 else -k)
+    # zig has n entries; differences are +1,-2,+3,... covering 1..n-1 once
+    paths = []
+    for k in range(m):
+        paths.append(tuple((k + z) % n for z in zig))
+    return paths
+
+
+def clique_decomposition(n: int, verify: bool = True) -> tuple[list[Ring], bool]:
+    """Decompose K_n into edge-disjoint Hamiltonian rings/chains.
+
+    Returns (rings, closed) where ``closed`` says whether entries are cycles
+    (odd n) or open chains (even n).
+    """
+    if n < 2:
+        return [], False
+    if n == 2:
+        return [(0, 1)], False
+    rings = walecki_cycles(n) if n % 2 == 1 else zigzag_paths(n)
+    closed = n % 2 == 1
+    if verify:
+        edge_fn = _edges_of_cycle if closed else _edges_of_path
+        all_edges: set[tuple[int, int]] = set()
+        for r in rings:
+            assert len(set(r)) == n, f"not Hamiltonian: {r}"
+            e = edge_fn(r)
+            assert not (e & all_edges), f"rings not edge-disjoint for n={n}"
+            all_edges |= e
+        expected = n * (n - 1) // 2
+        assert len(all_edges) == expected, (
+            f"decomposition covers {len(all_edges)}/{expected} edges of K_{n}"
+        )
+    return rings, closed
+
+
+@dataclass(frozen=True)
+class MultiRingPlan:
+    """A planned multi-ring AllReduce over one full-mesh clique."""
+
+    n: int
+    rings: tuple[Ring, ...]
+    closed: bool            # cycles (True) or chains (False)
+    lanes_per_peer: int     # UB lanes on each clique link
+    gbps_per_lane: float
+
+    @property
+    def links_used(self) -> int:
+        per = self.n if self.closed else self.n - 1
+        return per * len(self.rings)
+
+    @property
+    def links_total(self) -> int:
+        return self.n * (self.n - 1) // 2
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of clique links carrying AllReduce traffic."""
+        return self.links_used / max(1, self.links_total)
+
+    def effective_bandwidth_gbs(self) -> float:
+        """Per-chip AllReduce *algorithm* bandwidth.
+
+        Single ring: per-chip injection = one link's bandwidth.
+        Multi-ring: data is split across R rings => R links inject in
+        parallel from every chip => R x one-link bandwidth, which for a full
+        decomposition equals (almost) the node's whole clique allocation —
+        the paper's "fully utilize the bandwidth of direct links".
+        """
+        link_gbs = self.lanes_per_peer * self.gbps_per_lane
+        return len(self.rings) * link_gbs
+
+    def allreduce_wire_bytes_per_chip(self, size_bytes: int) -> float:
+        """Ring/chain AllReduce: each chip sends 2(n-1)/n of its shard count
+        per ring; total across rings is still 2(n-1)/n * size (the split
+        shrinks per-ring payload, not the total).
+        """
+        n = self.n
+        if n <= 1:
+            return 0.0
+        return 2.0 * (n - 1) / n * size_bytes
+
+    def allreduce_time_s(self, size_bytes: int, latency_s: float = 1e-6) -> float:
+        n = self.n
+        if n <= 1:
+            return 0.0
+        wire = self.allreduce_wire_bytes_per_chip(size_bytes)
+        bw = self.effective_bandwidth_gbs() * 1e9
+        steps = 2 * (n - 1)
+        return wire / bw + steps * latency_s
+
+
+def plan_multiring(topo: NDFullMesh, dim: int) -> MultiRingPlan:
+    """Plan the multi-ring AllReduce for the clique of dimension ``dim``."""
+    n = topo.shape[dim]
+    rings, closed = clique_decomposition(n)
+    d = topo.dims[dim]
+    return MultiRingPlan(
+        n=n,
+        rings=tuple(rings),
+        closed=closed,
+        lanes_per_peer=d.lanes_per_peer,
+        gbps_per_lane=d.link.gbps_per_lane,
+    )
+
+
+def single_ring_bandwidth_gbs(topo: NDFullMesh, dim: int) -> float:
+    """Baseline: one ring through the clique uses one link per chip."""
+    d = topo.dims[dim]
+    return d.lanes_per_peer * d.link.gbps_per_lane
+
+
+def borrowed_bandwidth_gbs(
+    topo: NDFullMesh, dim: int, *, borrow_lanes: int = 0
+) -> float:
+    """`Borrow` strategy (paper §6.3): racks may route overflow through the
+    LRS/HRS switch plane, adding ``borrow_lanes`` of switched bandwidth on
+    top of the direct-link multi-ring.
+    """
+    plan = plan_multiring(topo, dim)
+    return plan.effective_bandwidth_gbs() + borrow_lanes * topo.dims[dim].link.gbps_per_lane

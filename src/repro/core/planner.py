@@ -1,0 +1,164 @@
+"""Topology-aware parallelization planner (paper §5.2, Fig. 15).
+
+Step 1 — generate feasible parallelism configurations mapped onto UB-Mesh;
+Step 2 — price each with the topology-aware communication cost model;
+Step 3 — pick the minimum-cost configuration.
+
+Search-space pruning follows the paper's priority heuristic: TP and SP
+(high volume) are pinned to the high-bandwidth intra-rack domain first;
+PP and DP get what remains; for MoE, SP*DP must be an integer multiple of EP.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, replace
+
+from .cost_model import CommModel
+from .traffic import ParallelSpec, WorkloadSpec
+
+
+def _divisors_pow2(n: int, cap: int) -> list[int]:
+    out = []
+    d = 1
+    while d <= min(n, cap):
+        if n % d == 0:
+            out.append(d)
+        d *= 2
+    return out
+
+
+HBM_BYTES = 48e9        # datacenter-class NPU HBM (the paper's NPUs; the
+                        # production-mesh fit for OUR framework is checked by
+                        # the dry-run's memory_analysis, not this constant)
+
+
+def memory_feasible(w: WorkloadSpec, p: ParallelSpec, hbm: float = HBM_BYTES) -> bool:
+    """First-order per-chip memory: bf16 params + ZeRO-1 optimizer shards +
+    remat'd activation boundaries must fit HBM.  This is what forces PP at
+    small scale (and creates the paper's Fig. 22 super-linearity when larger
+    scale unlocks bubble-free configs).
+    """
+    if w.n_experts > 0:
+        dense = w.params_total * (1 - w.moe_param_frac)
+        moe = w.params_total * w.moe_param_frac
+        p_local = dense / (p.tp * p.pp) + moe / (p.tp * p.pp * p.ep)
+    else:
+        p_local = w.params_total / (p.tp * p.pp)
+    param_bytes = p_local * 2.0
+    grad_bytes = p_local * 2.0
+    optim_bytes = p_local * 12.0 / p.dp          # ZeRO-1: fp32 master + m + v
+    seqs_per_dp = max(1, w.global_batch // p.dp)
+    s_loc = max(1, w.seq_len // p.sp)
+    tokens_mb = max(1, seqs_per_dp * s_loc // max(1, p.microbatches))
+    layers_local = max(1, w.n_layers // p.pp)
+    # remat: keep ~2 boundary tensors per layer + pipeline in-flight copies
+    act_bytes = tokens_mb * w.hidden * 2.0 * 2.0 * layers_local
+    act_bytes *= min(p.pp, p.microbatches)      # 1F1B in-flight microbatches
+    return param_bytes + grad_bytes + optim_bytes + act_bytes <= hbm
+
+
+@dataclass(frozen=True)
+class PlanResult:
+    spec: ParallelSpec
+    iteration_s: float
+    compute_s: float
+    comm_s: float
+    bubble_s: float
+
+
+def enumerate_specs(
+    w: WorkloadSpec,
+    chips: int,
+    *,
+    rack_size: int = 64,
+    max_tp: int = 64,
+    microbatch_options: tuple[int, ...] = (1, 2, 4, 8, 13, 16, 32),
+) -> list[ParallelSpec]:
+    """Feasible (tp, sp, pp, dp, ep, m) factorizations of ``chips``."""
+    specs: list[ParallelSpec] = []
+    for tp in _divisors_pow2(chips, max_tp):
+        rem = chips // tp
+        for pp in _divisors_pow2(rem, min(rem, w.n_layers)):
+            dp = rem // pp
+            if dp < 1:
+                continue
+            seqs_per_dp = w.global_batch / dp
+            if seqs_per_dp < 1:
+                continue
+            sp_options = [
+                s for s in (1, 2, 4, 8, 16, 32, 64) if w.seq_len % s == 0
+            ]
+            for sp in sp_options:
+                # paper heuristic: prioritize TP*SP into the rack domain;
+                # long-context jobs may spill across racks (Fig. 20), but
+                # never beyond a quarter pod.
+                if tp * sp > 16 * rack_size:
+                    continue
+                ep_options = [1]
+                if w.n_experts > 0:
+                    ep_options = [
+                        e
+                        for e in (1, 2, 4, 8, 16, 32)
+                        if e <= w.n_experts
+                        and w.n_experts % e == 0
+                        and (sp * dp) % e == 0  # paper: SP*DP multiple of EP
+                    ]
+                for ep in ep_options:
+                    s_loc = max(1, w.seq_len // sp)
+                    # sequence-split microbatching: long-context jobs may
+                    # chop the local sequence into >=2048-token microbatches
+                    max_m = max(1, int(seqs_per_dp)) * max(1, s_loc // 2048)
+                    for m in microbatch_options:
+                        if m > max_m:
+                            continue
+                        if pp > 1 and m < pp:  # bubble-dominated; prune
+                            continue
+                        specs.append(
+                            ParallelSpec(
+                                tp=tp, sp=sp, pp=pp, dp=dp, ep=ep, microbatches=m
+                            )
+                        )
+    return specs
+
+
+def plan(
+    w: WorkloadSpec,
+    chips: int,
+    comm: CommModel,
+    *,
+    rack_size: int = 64,
+    top_k: int = 5,
+) -> list[PlanResult]:
+    """Rank feasible specs by simulated iteration time (Step 2+3)."""
+    from .simulator import simulate  # local import to avoid cycle
+
+    results: list[PlanResult] = []
+    for spec in enumerate_specs(w, chips, rack_size=rack_size):
+        if not memory_feasible(w, spec):
+            continue
+        try:
+            r = simulate(w, spec, comm, rack_size=rack_size)
+        except (KeyError, ZeroDivisionError):
+            continue
+        results.append(
+            PlanResult(
+                spec=spec,
+                iteration_s=r.iteration_s,
+                compute_s=r.compute_s,
+                comm_s=r.comm_total_s,
+                bubble_s=r.bubble_s,
+            )
+        )
+    results.sort(key=lambda x: x.iteration_s)
+    return results[:top_k]
+
+
+def best_parallel_spec(
+    w: WorkloadSpec, chips: int, comm: CommModel, *, rack_size: int = 64
+) -> ParallelSpec:
+    ranked = plan(w, chips, comm, rack_size=rack_size, top_k=1)
+    if not ranked:
+        raise ValueError(f"no feasible parallelization for {w.name} on {chips} chips")
+    return ranked[0].spec

@@ -1,0 +1,75 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each wrapper validates shapes, handles layout adaptation from the model
+layers' conventions, and routes through interpret mode on CPU (the
+container) vs compiled mode on TPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ccu_reduce import ccu_reduce as _ccu_reduce
+from .flash_attention import flash_attention as _flash
+from .moe_dispatch import moe_dispatch as _moe_dispatch, moe_gather_matmul
+from .rwkv6_scan import rwkv6_scan as _rwkv6
+from .ssd_scan import ssd_scan as _ssd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "prefix_len", "block_q", "block_k"))
+def flash_attention_bkgsd(
+    q, k, v, *, causal=True, window=None, prefix_len=0, block_q=128, block_k=128
+):
+    """q (B,K,G,Sq,D), k/v (B,K,Sk,D) -> (B,K,G,Sq,D)."""
+    assert q.ndim == 5 and k.ndim == 4 and v.shape == k.shape
+    assert q.shape[0] == k.shape[0] and q.shape[1] == k.shape[1]
+    return _flash(
+        q, k, v,
+        causal=causal, window=window, prefix_len=prefix_len,
+        block_q=block_q, block_k=block_k, interpret=_on_cpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "prefix_len"))
+def flash_attention_bsnd(
+    q, k, v, *, causal=True, window=None, prefix_len=0
+):
+    """Model-layer layout: q (B,S,N,Dh), k/v (B,S,K,Dh) GQA."""
+    B, S, N, D = q.shape
+    K = k.shape[2]
+    G = N // K
+    qk = q.reshape(B, S, K, G, D).transpose(0, 2, 3, 1, 4)   # (B,K,G,S,D)
+    kk = k.transpose(0, 2, 1, 3)                              # (B,K,S,D)
+    vv = v.transpose(0, 2, 1, 3)
+    o = _flash(
+        qk, kk, vv, causal=causal, window=window, prefix_len=prefix_len,
+        block_q=min(128, S), block_k=min(128, S), interpret=_on_cpu(),
+    )
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, N, D)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(xh, log_l, Bm, Cm, *, chunk=128):
+    return _ssd(xh, log_l, Bm, Cm, chunk=chunk, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("chunk", "tile"))
+def rwkv6_scan(r, k, v, w, u, *, chunk=128, tile=16):
+    return _rwkv6(r, k, v, w, u, chunk=chunk, tile=tile, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def moe_dispatch(disp, x, *, block_t=128):
+    return _moe_dispatch(disp, x, block_t=block_t, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("block_n",))
+def ccu_reduce(bufs, scales=None, *, block_n=512):
+    return _ccu_reduce(bufs, scales, block_n=block_n, interpret=_on_cpu())

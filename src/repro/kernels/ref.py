@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These mirror the math the model layers use, restated here in the kernels'
+native layouts so tests can assert_allclose directly.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,            # (B, K, G, Sq, D)
+    k: jax.Array,            # (B, K, Sk, D)
+    v: jax.Array,            # (B, K, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    B, K, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum(
+        "bkgqd,bksd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = ok & (q_pos >= k_pos)
+    if window is not None:
+        ok = ok & ((q_pos - k_pos) < window)
+    if prefix_len > 0:
+        ok = ok | (k_pos < prefix_len)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(xh, log_l, Bm, Cm, h0=None):
+    """Token-level SSD recurrence: the chunked kernel's oracle.
+
+    xh (B,S,H,P), log_l (B,S,H), Bm/Cm (B,S,N) -> y (B,S,H,P), h (B,H,P,N).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, t):
+        lam = jnp.exp(log_l[:, t])                         # (B,H)
+        dh = jnp.einsum("bhp,bn->bhpn", xh[:, t].astype(jnp.float32),
+                        Bm[:, t].astype(jnp.float32))
+        h = h * lam[:, :, None, None] + dh
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.swapaxes(ys, 0, 1).astype(xh.dtype), h
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Token-level RWKV6 recurrence (B,S,H,N) -> (y, final state)."""
+    B, S, H, N = r.shape
+    s = jnp.zeros((B, H, N, N), jnp.float32) if s0 is None else s0
+
+    def step(s, t):
+        rt = r[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        wt = w[:, t].astype(jnp.float32)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, y
+
+    s, ys = jax.lax.scan(step, s, jnp.arange(S))
+    return jnp.swapaxes(ys, 0, 1).astype(r.dtype), s
+
+
+def moe_gather_matmul_ref(disp, x, w):
+    """disp (T,E,C) one-hot dispatch; x (T,D); w (E,D,F) -> (E,C,F)."""
+    ein = jnp.einsum("tec,td->ecd", disp.astype(jnp.float32), x.astype(jnp.float32))
+    return jnp.einsum("ecd,edf->ecf", ein, w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ccu_reduce_ref(bufs):
+    """bufs (P, N): deterministic-order peer reduction -> (N,) fp32."""
+    acc = jnp.zeros(bufs.shape[1:], jnp.float32)
+    for p in range(bufs.shape[0]):
+        acc = acc + bufs[p].astype(jnp.float32)
+    return acc

@@ -1,0 +1,170 @@
+"""HLO analysis: collective-traffic + roofline terms from compiled modules.
+
+``collective_stats`` parses the (compiled) HLO text and accounts every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute:
+per-device WIRE bytes under ring-algorithm conventions:
+
+    all-reduce      2 (n-1)/n * bytes(result)
+    all-gather        (n-1)/n * bytes(result)
+    reduce-scatter    (n-1)/n * bytes(operand) = (n-1) * bytes(result)
+    all-to-all        (n-1)/n * bytes(result)
+    collective-permute            bytes(result)
+
+Group size n comes from replica_groups (explicit lists or iota form).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Total bytes of a result signature like 'f32[16,128]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                       # per-device, ring conv.
+    by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    count: int = 0
+    ops: list = field(default_factory=list)
+
+    def add(self, kind: str, bytes_: float, n: int):
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / max(n, 1) * bytes_
+        elif kind in ("all-gather", "all-to-all"):
+            wire = (n - 1) / max(n, 1) * bytes_
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * bytes_          # bytes_ is the (scattered) result
+        else:  # collective-permute
+            wire = bytes_
+        self.wire_bytes += wire
+        self.by_kind[kind] += wire
+        self.count += 1
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        # `%name = <sig> <op>(...)` — find which collective op this is
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", s):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in s:
+            continue  # avoid double counting async pairs
+        lhs, rhs = s.split("=", 1)
+        sig = rhs.strip().split(" ")[0]
+        bytes_ = _shape_bytes(sig)
+        if bytes_ == 0:
+            continue
+        n = _group_size(s, default_group)
+        stats.add(kind, float(bytes_), n)
+        stats.ops.append((kind, bytes_, n))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (hardware constants per harness spec: TPU v5e-class)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link; model axis rides the intra-rack
+                             # multi-ring (DESIGN.md §2), ~1 link per chip
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    model_flops: float = 0.0     # analytic 6*N*D (or 6*N_active*D)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }

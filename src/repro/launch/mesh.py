@@ -1,0 +1,22 @@
+"""Production mesh construction (harness-specified shapes).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  Axes map onto the UB-Mesh hierarchy:
+"model" = intra-rack 2D-FullMesh (high-bandwidth TP/SP domain),
+"data"  = inter-rack 2D-FullMesh, "pod" = HRS Clos tier (DESIGN.md §2/§5).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (requires that many host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

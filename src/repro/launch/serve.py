@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + decode loop with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import load
+from repro.models.api import ShapeCell
+from repro.models.layers import Runtime
+from repro.models.param import tree_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    harness = load(args.arch, smoke=args.smoke)
+    cfg = harness.cfg
+    rt = Runtime(rules=None)
+    key = jax.random.PRNGKey(0)
+    params = tree_init(harness.param_specs(), key, dtype=jnp.bfloat16)
+
+    max_len = args.prompt_len + args.gen + 8
+    cell = ShapeCell("serve", "decode", max_len, args.batch)
+    state = tree_init(harness.serve_state_specs(cell), key)
+
+    prefill = jax.jit(harness.prefill(rt))
+    decode = jax.jit(harness.decode(rt))
+
+    rng = np.random.default_rng(0)
+    vocab = cfg.vocab_size
+    prompts = jnp.asarray(
+        rng.integers(0, vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
+    )
+
+    t0 = time.time()
+    if harness.family == "audio":
+        frames = jnp.zeros((args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        logits, state = prefill(params, state, frames, prompts)
+    else:
+        logits, state = prefill(params, state, prompts)
+    t_prefill = time.time() - t0
+
+    def sample(logits, key):
+        lg = logits[:, -1, :vocab].astype(jnp.float32)
+        if args.temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg / args.temperature).astype(jnp.int32)
+
+    tok = sample(logits, key)
+    out_tokens = [tok]
+    t1 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        logits, state = decode(params, state, tok[:, None], pos)
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        out_tokens.append(tok)
+    t_decode = time.time() - t1
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"[serve] arch={args.arch} batch={args.batch} "
+          f"prefill={t_prefill*1e3:.0f}ms "
+          f"decode={t_decode/max(args.gen-1,1)*1e3:.1f}ms/tok")
+    print(f"[serve] generated token ids (first row): {gen[0][:16].tolist()}")
+    assert gen.shape == (args.batch, args.gen)
+    assert np.all(gen >= 0) and np.all(gen < vocab)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone (pool arch ``whisper-base``).
+
+The conv/mel frontend is a STUB per the harness spec: ``input_specs()``
+provides precomputed frame embeddings (B, T_frames, d_model).  Sinusoidal
+positions are added here; the encoder is bidirectional, the decoder has
+causal self-attention + cross-attention over the encoder output.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .param import ParamSpec, cast_floats, round_up, stack_specs
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int               # per stack (encoder AND decoder)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    n_frames: int = 1500        # stub frontend output length (30 s audio)
+    remat_policy: str = "nothing"
+    unroll: bool = False
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def vocab_padded(self) -> int:
+        return round_up(self.vocab_size, 256)
+
+    def attn(self, causal: bool) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            causal=causal,
+            rope_theta=None,          # whisper: absolute sinusoidal positions
+            qkv_bias=True,
+        )
+
+
+def _scan_or_unroll(cfg, body, init, xs):
+    if not cfg.unroll:
+        return jax.lax.scan(body, init, xs)
+    carry = init
+    ys = []
+    n = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a, axis=0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def sinusoid(max_len: int, dim: int) -> jax.Array:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim)
+    )
+    pe = jnp.zeros((max_len, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def enc_block_specs(cfg: EncDecConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(cfg.d_model),
+        "attn": L.attn_specs(cfg.attn(False)),
+        "ln2": L.layernorm_specs(cfg.d_model),
+        "mlp": L.gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def dec_block_specs(cfg: EncDecConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(cfg.d_model),
+        "self_attn": L.attn_specs(cfg.attn(True)),
+        "ln_x": L.layernorm_specs(cfg.d_model),
+        "cross_attn": L.attn_specs(cfg.attn(False)),
+        "ln2": L.layernorm_specs(cfg.d_model),
+        "mlp": L.gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_specs(cfg: EncDecConfig) -> dict:
+    return {
+        "embed": L.embed_specs(cfg.vocab_padded, cfg.d_model),
+        "enc_blocks": stack_specs(enc_block_specs(cfg), cfg.n_layers),
+        "enc_norm": L.layernorm_specs(cfg.d_model),
+        "dec_blocks": stack_specs(dec_block_specs(cfg), cfg.n_layers),
+        "dec_norm": L.layernorm_specs(cfg.d_model),
+    }
+
+
+def encode(rt, cfg: EncDecConfig, params, frames: jax.Array) -> jax.Array:
+    x = frames.astype(cfg.dtype) + sinusoid(frames.shape[1], cfg.d_model).astype(cfg.dtype)
+    x = rt.shard(x, "batch", "sp", None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a, _ = L.attention(rt, lp["attn"], L.layernorm(lp["ln1"], h), cfg.attn(False), positions)
+        h = h + a
+        h = h + L.gelu_mlp(rt, lp["mlp"], L.layernorm(lp["ln2"], h))
+        return rt.shard(h, "batch", "sp", None), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = _scan_or_unroll(cfg, body, x, params["enc_blocks"])
+    return L.layernorm(params["enc_norm"], x)
+
+
+def _dec_block(rt, cfg, lp, h, enc_out, positions, cache=None, cache_pos=None):
+    a, new_cache = L.attention(
+        rt, lp["self_attn"], L.layernorm(lp["ln1"], h), cfg.attn(True),
+        positions, cache, cache_pos,
+    )
+    h = h + a
+    c, _ = L.attention(
+        rt, lp["cross_attn"], L.layernorm(lp["ln_x"], h), cfg.attn(False),
+        positions, kv_override=enc_out,
+    )
+    h = h + c
+    h = h + L.gelu_mlp(rt, lp["mlp"], L.layernorm(lp["ln2"], h))
+    return rt.shard(h, "batch", "sp", None), new_cache
+
+
+def forward(rt, cfg: EncDecConfig, params, frames, tokens):
+    """Teacher-forced training forward.  Returns logits."""
+    params = cast_floats(params, cfg.dtype)
+    enc_out = encode(rt, cfg, params, frames)
+    y = L.embed(rt, params["embed"], tokens).astype(cfg.dtype)
+    S = y.shape[1]
+    y = y + sinusoid(S, cfg.d_model).astype(cfg.dtype)
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        h, _ = _dec_block(rt, cfg, lp, h, enc_out, positions)
+        return h, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    y, _ = _scan_or_unroll(cfg, body, y, params["dec_blocks"])
+    y = L.layernorm(params["dec_norm"], y)
+    return L.unembed(rt, params["embed"], y)
+
+
+def loss_fn(rt, cfg, params, batch):
+    logits = forward(rt, cfg, params, batch["frames"], batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def cache_specs(cfg: EncDecConfig, batch: int, max_len: int) -> dict:
+    kv = L.init_kv_cache(cfg.attn(True), batch, max_len, cfg.n_layers, cfg.dtype)
+    kv["enc_out"] = ParamSpec(
+        (batch, cfg.n_frames, cfg.d_model),
+        ("batch", None, None),
+        init="zeros",
+        dtype=jnp.bfloat16,
+    )
+    return kv
+
+
+def prefill(rt, cfg: EncDecConfig, params, frames, tokens, cache):
+    """Encode + write decoder self-attn cache for positions [0, S)."""
+    params = cast_floats(params, cfg.dtype)
+    enc_out = encode(rt, cfg, params, frames)
+    y = L.embed(rt, params["embed"], tokens).astype(cfg.dtype)
+    S = y.shape[1]
+    y = y + sinusoid(S, cfg.d_model).astype(cfg.dtype)
+    positions = jnp.arange(S)
+    zero = jnp.zeros((), jnp.int32)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h, new_cache = _dec_block(
+            rt, cfg, lp, h, enc_out, positions, cache=(ck, cv), cache_pos=zero
+        )
+        return h, new_cache
+
+    y, (ck, cv) = _scan_or_unroll(cfg, body, y, (params["dec_blocks"], cache["k"], cache["v"]))
+    y = L.layernorm(params["dec_norm"], y)
+    logits = L.unembed(rt, params["embed"], y[:, -1:])
+    return logits, {"k": ck, "v": cv, "enc_out": enc_out}
+
+
+def decode_step(rt, cfg: EncDecConfig, params, tokens, cache, pos):
+    params = cast_floats(params, cfg.dtype)
+    enc_out = cache["enc_out"].astype(cfg.dtype)
+    y = L.embed(rt, params["embed"], tokens).astype(cfg.dtype)
+    # gather the single position's sinusoid dynamically
+    pe_t = jax.lax.dynamic_slice_in_dim(
+        sinusoid(65536, cfg.d_model), pos if pos.ndim == 0 else pos[0], 1, axis=0
+    )
+    y = y + pe_t.astype(cfg.dtype)[None]
+    positions = pos[None] if pos.ndim == 0 else pos
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h, new_cache = _dec_block(
+            rt, cfg, lp, h, enc_out, positions, cache=(ck, cv), cache_pos=pos
+        )
+        return h, new_cache
+
+    y, (ck, cv) = _scan_or_unroll(cfg, body, y, (params["dec_blocks"], cache["k"], cache["v"]))
+    y = L.layernorm(params["dec_norm"], y)
+    logits = L.unembed(rt, params["embed"], y)
+    return logits, {"k": ck, "v": cv, "enc_out": cache["enc_out"]}

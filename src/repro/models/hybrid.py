@@ -1,0 +1,209 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+38 Mamba2 blocks; after every ``share_every``-th block the single shared
+(weight-tied) attention+MLP block runs (zamba2's global-context injector).
+Pool spec: 38L, d_model=2048, 32H GQA kv=32, d_ff=8192, ssm_state=64.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .mamba2 import (
+    Mamba2Config,
+    mamba2_apply,
+    mamba2_specs,
+    mamba2_state_specs,
+)
+from .param import ParamSpec, cast_floats, round_up, stack_specs
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    ssm_state: int = 64
+    share_every: int = 6
+    rope_theta: float = 10000.0
+    remat_policy: str = "nothing"
+    unroll: bool = False
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def vocab_padded(self) -> int:
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def mamba(self) -> Mamba2Config:
+        return Mamba2Config(
+            d_model=self.d_model,
+            d_inner=2 * self.d_model,
+            d_state=self.ssm_state,
+            unroll=self.unroll,
+        )
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            causal=True,
+            rope_theta=self.rope_theta,
+        )
+
+    @property
+    def n_shared_calls(self) -> int:
+        # shared block runs after every share_every-th mamba block EXCEPT
+        # when that block is the last one (forward loop: done < n_layers)
+        return (self.n_layers - 1) // self.share_every
+
+
+def lm_specs(cfg: HybridConfig) -> dict:
+    return {
+        "embed": L.embed_specs(cfg.vocab_padded, cfg.d_model),
+        "mamba_blocks": stack_specs(
+            {"norm": L.rmsnorm_spec(cfg.d_model), "mamba": mamba2_specs(cfg.mamba)},
+            cfg.n_layers,
+        ),
+        "shared": {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "attn": L.attn_specs(cfg.attn),
+            "ln2": L.rmsnorm_spec(cfg.d_model),
+            "mlp": L.swiglu_specs(cfg.d_model, cfg.d_ff),
+        },
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def _tree_slice(tree, start, size):
+    return jax.tree.map(lambda x: jax.lax.slice_in_dim(x, start, start + size, axis=0), tree)
+
+
+def _shared_block(rt, cfg, p, x, positions, cache=None, cache_pos=None):
+    h = L.rmsnorm(p["ln1"], x)
+    a, new_cache = L.attention(rt, p["attn"], h, cfg.attn, positions, cache, cache_pos)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x)
+    x = x + L.swiglu(rt, p["mlp"], h)
+    return rt.shard(x, "batch", "sp", None), new_cache
+
+
+def forward(rt, cfg: HybridConfig, params, tokens):
+    params = cast_floats(params, cfg.dtype)
+    x = L.embed(rt, params["embed"], tokens).astype(cfg.dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def mamba_body(h, lp):
+        y, _ = mamba2_apply(rt, lp["mamba"], L.rmsnorm(lp["norm"], h), cfg.mamba)
+        return (h + y).astype(cfg.dtype), None
+
+    mamba_body = jax.checkpoint(
+        mamba_body, policy=jax.checkpoint_policies.nothing_saveable
+    )
+
+    done = 0
+    group = cfg.share_every
+    while done < cfg.n_layers:
+        size = min(group, cfg.n_layers - done)
+        blk = _tree_slice(params["mamba_blocks"], done, size)
+        if cfg.unroll:
+            for i in range(size):
+                x, _ = mamba_body(x, jax.tree.map(lambda t: t[i], blk))
+        else:
+            x, _ = jax.lax.scan(mamba_body, x, blk)
+        done += size
+        if done % group == 0 and done < cfg.n_layers:
+            x, _ = _shared_block(rt, cfg, params["shared"], x, positions)
+    x = L.rmsnorm(params["final_norm"], x)
+    return L.unembed(rt, params["embed"], x)
+
+
+def loss_fn(rt, cfg, params, batch):
+    logits = forward(rt, cfg, params, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def state_specs(cfg: HybridConfig, batch: int, max_attn_len: int) -> dict:
+    """Decode state: per-layer SSM states + ONE shared-attn KV cache per
+    shared call site."""
+    ssm = mamba2_state_specs(cfg.mamba, batch, cfg.n_layers)
+    n_calls = cfg.n_shared_calls
+    kv = L.init_kv_cache(cfg.attn, batch, max_attn_len, n_calls, cfg.dtype)
+    return {"ssm": ssm, "kv": kv}
+
+
+def decode_step(rt, cfg: HybridConfig, params, tokens, state, pos):
+    params = cast_floats(params, cfg.dtype)
+    x = L.embed(rt, params["embed"], tokens).astype(cfg.dtype)
+    positions = pos[None] if pos.ndim == 0 else pos
+    ssm, kv = state["ssm"], state["kv"]
+
+    def mamba_body(h, xs):
+        lp, hs, cs = xs
+        y, new = mamba2_apply(
+            rt, lp["mamba"], L.rmsnorm(lp["norm"], h), cfg.mamba,
+            state={"h": hs, "conv": cs},
+        )
+        return (h + y).astype(cfg.dtype), (new["h"], new["conv"])
+
+    new_h, new_conv, new_k, new_v = [], [], [], []
+    done = 0
+    call = 0
+    group = cfg.share_every
+    while done < cfg.n_layers:
+        size = min(group, cfg.n_layers - done)
+        blk = _tree_slice(params["mamba_blocks"], done, size)
+        hs = jax.lax.slice_in_dim(ssm["h"], done, done + size, axis=0)
+        cs = jax.lax.slice_in_dim(ssm["conv"], done, done + size, axis=0)
+        if cfg.unroll:
+            houts, couts = [], []
+            for i in range(size):
+                x, (ho, co) = mamba_body(
+                    x, jax.tree.map(lambda t: t[i], (blk, hs, cs))
+                )
+                houts.append(ho)
+                couts.append(co)
+            h_out = jnp.stack(houts, axis=0)
+            c_out = jnp.stack(couts, axis=0)
+        else:
+            x, (h_out, c_out) = jax.lax.scan(mamba_body, x, (blk, hs, cs))
+        new_h.append(h_out)
+        new_conv.append(c_out)
+        done += size
+        if done % group == 0 and done < cfg.n_layers:
+            ck = kv["k"][call]
+            cv = kv["v"][call]
+            x, (nk, nv) = _shared_block(
+                rt, cfg, params["shared"], x, positions,
+                cache=(ck, cv), cache_pos=pos,
+            )
+            new_k.append(nk[None])
+            new_v.append(nv[None])
+            call += 1
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(rt, params["embed"], x)
+    new_state = {
+        "ssm": {
+            "h": jnp.concatenate(new_h, axis=0),
+            "conv": jnp.concatenate(new_conv, axis=0),
+        },
+        "kv": {
+            "k": jnp.concatenate(new_k, axis=0) if new_k else kv["k"],
+            "v": jnp.concatenate(new_v, axis=0) if new_v else kv["v"],
+        },
+    }
+    return logits, new_state

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block — chunked state-space scan, TPU-matmul friendly.
+
+The chunked SSD formulation computes, per chunk of Q tokens, an intra-chunk
+causal "linear attention with decay" via matmuls plus an inter-chunk state
+recurrence carried by ``lax.scan`` — this is the structure our Pallas
+``ssd_scan`` kernel tiles into VMEM (kernels/ssd_scan.py; this module is the
+reference implementation and the decode path).
+
+Sharding: SSM heads shard over "model" (state ops are head-local), batch
+over "data".  The sequence dim stays unsharded inside the scan (it is the
+scan axis); hybrid models reshard at block boundaries.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Runtime, rmsnorm, rmsnorm_spec
+from .param import ParamSpec
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_inner: int             # typically 2 * d_model
+    d_state: int = 64        # N
+    head_dim: int = 64       # P
+    d_conv: int = 4
+    chunk: int = 128
+    unroll: bool = False   # python-loop chunks (dry-run cost probes)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_specs(cfg: Mamba2Config) -> dict:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": ParamSpec(
+            (D, 2 * DI + 2 * N + H), ("embed_in", "ssm_proj"), init="scaled"
+        ),
+        "conv_w": ParamSpec((cfg.d_conv, DI + 2 * N), (None, None), init="scaled"),
+        "conv_b": ParamSpec((DI + 2 * N,), (None,), init="zeros"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="zeros"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "out_norm": rmsnorm_spec(DI),
+        "out_proj": ParamSpec((DI, D), ("ssm_inner", "embed_in"), init="scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv over (B, S, C); returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else None
+    return y + b, new_state
+
+
+def ssd_chunked(
+    xh: jax.Array,      # (B, S, H, P)   dt-weighted inputs
+    log_l: jax.Array,   # (B, S, H)      log decay per token (dt * A, <= 0)
+    Bm: jax.Array,      # (B, S, N)
+    Cm: jax.Array,      # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, H, P, N)
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), h_final)."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    n_chunks = S // Q
+    assert S % Q == 0, "sequence must be divisible by the chunk size"
+
+    xh_c = xh.reshape(B, n_chunks, Q, H, P)
+    ll_c = log_l.reshape(B, n_chunks, Q, H)
+    B_c = Bm.reshape(B, n_chunks, Q, N)
+    C_c = Cm.reshape(B, n_chunks, Q, N)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(h, xs):
+        xq, lq, bq, cq = xs          # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(lq, axis=1)                     # (B,Q,H)
+        # intra-chunk: att[i,j] = (C_i . B_j) * exp(cum_i - cum_j) for i>=j
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)      # (B,Q,Q)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        att = scores[..., None] * jnp.exp(
+            jnp.where(causal[None, :, :, None], decay, -jnp.inf)
+        )                                                # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att.astype(xq.dtype), xq)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum(
+            "bin,bhpn->bihp", cq, h.astype(cq.dtype)
+        ) * jnp.exp(cum)[..., None].astype(cq.dtype)
+        # state update: h' = h * exp(sum l) + sum_j exp(cum_Q - cum_j) x_j B_j^T
+        tail = jnp.exp(cum[:, -1:, :] - cum)             # (B,Q,H)
+        dh = jnp.einsum(
+            "bjhp,bjn,bjh->bhpn", xq.astype(jnp.float32), bq.astype(jnp.float32), tail
+        )
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + dh
+        return h_new, (y_intra + y_inter).astype(xq.dtype)
+
+    xs = (
+        xh_c.transpose(1, 0, 2, 3, 4),
+        ll_c.transpose(1, 0, 2, 3),
+        B_c.transpose(1, 0, 2, 3),
+        C_c.transpose(1, 0, 2, 3),
+    )
+    if unroll:
+        h = h0
+        ylist = []
+        for c in range(n_chunks):
+            h, yc = body(h, jax.tree.map(lambda t: t[c], xs))
+            ylist.append(yc)
+        h_final, ys = h, jnp.stack(ylist, axis=0)
+    else:
+        h_final, ys = jax.lax.scan(body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, h_final
+
+
+def mamba2_apply(
+    rt: Runtime,
+    p: dict,
+    x: jax.Array,               # (B, S, D)
+    cfg: Mamba2Config,
+    state: dict | None = None,  # decode: {"h": (B,H,P,N), "conv": (B,K-1,C)}
+) -> tuple[jax.Array, dict | None]:
+    B, S, D = x.shape
+    DI, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"], None if state is None else state["conv"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [DI, DI + N], axis=-1)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    log_l = dt * a                                                # (B,S,H) <=0
+    xh = xc.reshape(B, S, H, P)
+    xh = rt.shard(xh, "batch", None, "ssm_heads", None)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    if state is None:
+        y, h_final = ssd_chunked(xdt, log_l, Bm, Cm, cfg.chunk, unroll=cfg.unroll)
+        new_state = None
+    else:
+        # single-token recurrence (S small, typically 1)
+        h = state["h"]
+        ys = []
+        for t in range(S):
+            lam = jnp.exp(log_l[:, t])                            # (B,H)
+            dh = jnp.einsum("bhp,bn->bhpn", xdt[:, t].astype(jnp.float32), Bm[:, t].astype(jnp.float32))
+            h = h * lam[:, :, None, None] + dh
+            ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h))
+        y = jnp.stack(ys, axis=1).astype(x.dtype)
+        h_final = h
+        new_state = {"h": h_final, "conv": conv_state}
+
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, DI)
+    y = rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"])
+    return rt.shard(out, "batch", None, None), new_state
+
+
+def mamba2_state_specs(cfg: Mamba2Config, batch: int, n_layers: int) -> dict:
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
+    C = cfg.d_inner + 2 * N
+    return {
+        "h": ParamSpec(
+            (n_layers, batch, H, P, N),
+            ("layers", "batch", "ssm_heads", None, None),
+            init="zeros",
+            dtype=jnp.float32,
+        ),
+        "conv": ParamSpec(
+            (n_layers, batch, cfg.d_conv - 1, C),
+            ("layers", "batch", None, None),
+            init="zeros",
+            dtype=jnp.bfloat16,
+        ),
+    }

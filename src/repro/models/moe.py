@@ -1,0 +1,125 @@
+"""Mixture-of-Experts layer — GShard-style einsum dispatch.
+
+Token-choice top-k routing with per-sequence expert capacity and dropped
+overflow tokens (the standard TPU MoE formulation).  The dispatch/combine
+einsums between token-sharded activations and expert-sharded weights are
+what make GSPMD emit the EP All-to-All — the traffic class the paper's
+hierarchical All2All (§5.1) optimizes.
+
+Sharding strategies (both keep jit-boundary shapes evenly divisible):
+
+* ``expert_parallel`` (dbrx, 16 experts == model axis): expert dim over
+  "model"  => real EP with A2A; expert ff dim over "data" (FSDP gather).
+* ``expert_tp`` (mixtral, 8 experts < model axis): expert ff dim over
+  "model" (tensor-parallel experts), embed dim over "data" (FSDP gather).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Runtime
+from .param import ParamSpec
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    topk: int
+    d_ff: int
+    strategy: str = "expert_parallel"   # expert_parallel | expert_tp
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # §Perf knobs (EXPERIMENTS.md, dbrx hillclimb):
+    reshard_tokens: bool = False   # reshard x seq->d_model before dispatch so
+                                   # GSPMD lowers dispatch/combine as A2A over
+                                   # the expert axis instead of full psums
+    dispatch_dtype: str = "f32"    # f32 | bf16 collective payloads
+
+
+def moe_specs(d_model: int, cfg: MoEConfig) -> dict:
+    E, F = cfg.n_experts, cfg.d_ff
+    if cfg.strategy == "expert_parallel":
+        logical = ("experts", None, "moe_fsdp")
+        logical_out = ("experts", "moe_fsdp", None)
+    else:
+        logical = (None, "moe_fsdp", "ff")
+        logical_out = (None, "ff", "moe_fsdp")
+    return {
+        "router": ParamSpec((d_model, E), (None, None), init="scaled"),
+        "w_gate": ParamSpec((E, d_model, F), logical, init="scaled"),
+        "w_up": ParamSpec((E, d_model, F), logical, init="scaled"),
+        "w_down": ParamSpec((E, F, d_model), logical_out, init="scaled"),
+    }
+
+
+def moe_apply(
+    rt: Runtime, p: dict, x: jax.Array, cfg: MoEConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, router aux loss).  x: (B, S, D)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.topk
+    C = max(1, int(S * K * cfg.capacity_factor / E))
+
+    if cfg.reshard_tokens:
+        # move the model-axis sharding from seq to d_model for the MoE body:
+        # the dispatch einsum then contracts an UNSHARDED seq dim and the
+        # (tokens -> experts) switch becomes an all-to-all over "model"
+        x = rt.shard(x, "batch", None, "moe_d_act")
+
+    gate_logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (B, S, K)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- capacity assignment (GShard): position of each routed token in
+    # its expert's buffer; overflow beyond C is dropped --------------------
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B, S, K, E)
+    # order: k-th choices of earlier tokens first
+    flat = onehot.transpose(0, 2, 1, 3).reshape(B, K * S, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat          # (B, K*S, E)
+    pos = pos_in_expert.reshape(B, K, S, E).transpose(0, 2, 1, 3)  # (B,S,K,E)
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (B, S, K)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch / combine tensors
+    pos_onehot = jax.nn.one_hot(pos, C, dtype=x.dtype)       # (B, S, K, C)
+    disp = jnp.einsum(
+        "bske,bskc->bsec", onehot.astype(x.dtype) * keep[..., None].astype(x.dtype), pos_onehot
+    )                                                        # (B, S, E, C)
+    comb = jnp.einsum(
+        "bske,bskc,bsk->bsec",
+        onehot.astype(x.dtype),
+        pos_onehot,
+        gate_vals.astype(x.dtype),
+    )
+
+    dd = jnp.bfloat16 if cfg.dispatch_dtype == "bf16" else None
+    expert_in = jnp.einsum(
+        "bsec,bsd->ebcd", disp, x, preferred_element_type=dd
+    )                                                        # (E, B, C, D)
+    expert_in = rt.shard(expert_in, "experts_act", "batch", None, None)
+    if dd is not None:
+        expert_in = expert_in.astype(jnp.bfloat16)
+    g = jnp.einsum("ebcd,edf->ebcf", expert_in, p["w_gate"])
+    u = jnp.einsum("ebcd,edf->ebcf", expert_in, p["w_up"])
+    h = jax.nn.silu(g) * u
+    h = rt.shard(h, "experts_act", "batch", None, "moe_ff_act")
+    eo = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"])
+    eo = rt.shard(eo, "experts_act", "batch", None, None)
+    if dd is not None:
+        eo = eo.astype(jnp.bfloat16)
+    y = jnp.einsum("bsec,ebcd->bsd", comb, eo, preferred_element_type=dd)
+    y = rt.shard(y, "batch", "sp", None)
+
+    # ---- load-balancing auxiliary loss (Switch/GShard form) --------------
+    me = jnp.mean(onehot[..., 0, :] if K == 1 else jnp.sum(onehot, axis=2), axis=(0, 1)) / K
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,254 @@
+"""RWKV-6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Per head (dim N): state S in R^{N x N};  per token t:
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)        (u: per-channel bonus)
+with data-dependent w_t = exp(-exp(w0 + lora(x_t))) in (0, 1).
+
+Chunked form (matmul-heavy, the Pallas ``rwkv6_scan`` kernel's shape): per
+chunk, intra-chunk is a causal linear attention with per-channel decay
+products; inter-chunk carries S.  Token-shift mixing follows RWKV's x_t /
+x_{t-1} lerp (static per-channel mu here; the data-dependent LoRA applies to
+the decay, the dominant Finch novelty).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Runtime, rmsnorm, rmsnorm_spec
+from .param import ParamSpec
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 7168
+    decay_lora: int = 64
+    chunk: int = 128
+    unroll: bool = False   # python-loop chunks (dry-run cost probes)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def timemix_specs(cfg: RWKV6Config) -> dict:
+    D, L = cfg.d_model, cfg.decay_lora
+    return {
+        "mu": ParamSpec((5, D), (None, None), init="zeros"),  # r,k,v,g,w shifts
+        "wr": ParamSpec((D, D), ("embed_in", "rkv"), init="scaled"),
+        "wk": ParamSpec((D, D), ("embed_in", "rkv"), init="scaled"),
+        "wv": ParamSpec((D, D), ("embed_in", "rkv"), init="scaled"),
+        "wg": ParamSpec((D, D), ("embed_in", "rkv"), init="scaled"),
+        "w0": ParamSpec((D,), (None,), init="zeros"),
+        "w_lora_a": ParamSpec((D, L), ("embed_in", None), init="scaled"),
+        "w_lora_b": ParamSpec((L, D), (None, "rkv"), init="scaled"),
+        "bonus_u": ParamSpec((D,), (None,), init="zeros"),
+        "ln_out": rmsnorm_spec(D),
+        "wo": ParamSpec((D, D), ("rkv", "embed_in"), init="scaled"),
+    }
+
+
+def channelmix_specs(cfg: RWKV6Config) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "mu": ParamSpec((2, D), (None, None), init="zeros"),   # k, r shifts
+        "wk": ParamSpec((D, F), ("embed_in", "ff"), init="scaled"),
+        "wv": ParamSpec((F, D), ("ff", "embed_in"), init="scaled"),
+        "wr": ParamSpec((D, D), ("embed_in", "rkv"), init="scaled"),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream; ``last`` carries the final token across steps."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu[None, None, :]
+
+
+def rwkv6_chunked(
+    r: jax.Array,   # (B, S, H, N)
+    k: jax.Array,   # (B, S, H, N)
+    v: jax.Array,   # (B, S, H, N)
+    w: jax.Array,   # (B, S, H, N)  per-channel decay in (0,1)  (float32)
+    u: jax.Array,   # (H, N) bonus
+    chunk: int,
+    s0: jax.Array | None = None,    # (B, H, N, N)
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked linear-attention scan.  Returns (y, final_state)."""
+    B, S, H, N = r.shape
+    Q = min(chunk, S)
+    n_chunks = S // Q
+    assert S % Q == 0
+
+    logw = jnp.log(jnp.clip(w, 1e-6, 1.0))             # (B,S,H,N) <= 0
+
+    def reshape(x):
+        return x.reshape(B, n_chunks, Q, H, N).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lc = reshape(r), reshape(k), reshape(v), reshape(logw)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    T = min(16, Q)                                       # pairwise sub-tile
+    n_tiles = Q // T
+
+    def body(s, xs):
+        rq, kq, vq, lq = xs                             # (B,Q,H,N)...
+        rq32 = rq.astype(jnp.float32)
+        kq32 = kq.astype(jnp.float32)
+        vq32 = vq.astype(jnp.float32)
+        cum = jnp.cumsum(lq, axis=1)                    # (B,Q,H,N) <= 0
+        # inter-chunk: y_i += (r_i * prod_{t<i} w_t) S ; cum - lq <= 0 safe
+        y_inter = jnp.einsum("bihn,bhnm->bihm", rq32 * jnp.exp(cum - lq), s)
+        # intra-chunk, DIRECT pairwise form — the decay difference
+        # cum_i - lq_i - cum_j is <= 0 for j < i, so every exp is bounded.
+        # Tiled over (T x T) sub-blocks to bound the (B,T,T,H,N) temporary
+        # (this tiling is exactly what kernels/rwkv6_scan does in VMEM).
+        y_intra = jnp.zeros_like(vq32)
+        for ti in range(n_tiles):
+            i0 = ti * T
+            ci = (cum - lq)[:, i0 : i0 + T]              # decay BEFORE i
+            ri = rq32[:, i0 : i0 + T]
+            acc = jnp.zeros((B, T, H, N), jnp.float32)
+            for tj in range(ti + 1):
+                j0 = tj * T
+                cj = cum[:, j0 : j0 + T]
+                d = ci[:, :, None] - cj[:, None, :]      # (B,T,T,H,N)
+                if ti == tj:
+                    mask = jnp.tril(jnp.ones((T, T), bool), k=-1)
+                    d = jnp.where(mask[None, :, :, None, None], d, -jnp.inf)
+                att = jnp.einsum(
+                    "bihn,bjhn,bijhn->bhij",
+                    ri,
+                    kq32[:, j0 : j0 + T],
+                    jnp.exp(d),
+                )
+                acc = acc + jnp.einsum(
+                    "bhij,bjhn->bihn", att, vq32[:, j0 : j0 + T]
+                )
+            y_intra = jax.lax.dynamic_update_slice_in_dim(y_intra, acc, i0, axis=1)
+        bonus = jnp.einsum("bihn,hn,bihn->bih", rq32, u, kq32)
+        y_bonus = bonus[..., None] * vq32
+        # state update: S' = diag(prod w) S + sum_j (prod_{t>j} w_t) k_j v_j^T
+        tail = jnp.exp(cum[:, -1:, :, :] - cum)              # <= 1 safe
+        s_new = s * jnp.exp(cum[:, -1])[:, :, :, None] + jnp.einsum(
+            "bjhn,bjhm->bhnm", kq32 * tail, vq32
+        )
+        return s_new, (y_inter + y_intra + y_bonus).astype(rq.dtype)
+
+    if unroll:
+        s = s0
+        ylist = []
+        for c in range(n_chunks):
+            s, yc = body(s, (rc[c], kc[c], vc[c], lc[c]))
+            ylist.append(yc)
+        s_final, ys = s, jnp.stack(ylist, axis=0)
+    else:
+        s_final, ys = jax.lax.scan(body, s0, (rc, kc, vc, lc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    return y, s_final
+
+
+def timemix_apply(
+    rt: Runtime,
+    p: dict,
+    x: jax.Array,
+    cfg: RWKV6Config,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.head_dim
+    xprev = _token_shift(x, None if state is None else state["shift"])
+    mu = p["mu"]
+    r = jnp.einsum("bsd,de->bse", _lerp(x, xprev, mu[0]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", _lerp(x, xprev, mu[1]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", _lerp(x, xprev, mu[2]), p["wv"])
+    g = jnp.einsum("bsd,de->bse", _lerp(x, xprev, mu[3]), p["wg"])
+    xw = _lerp(x, xprev, mu[4])
+    wlog = p["w0"][None, None] + jnp.einsum(
+        "bsd,dl,le->bse", xw, p["w_lora_a"], p["w_lora_b"]
+    )
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32)))          # (0,1) decay
+
+    def heads(t):
+        return t.reshape(B, S, H, N)
+
+    r4, k4, v4, w4 = heads(r), heads(k), heads(v), heads(w)
+    r4 = rt.shard(r4, "batch", None, "ssm_heads", None)
+    u = p["bonus_u"].reshape(H, N)
+
+    if state is None:
+        y, s_final = rwkv6_chunked(r4, k4, v4, w4, u, cfg.chunk, unroll=cfg.unroll)
+        new_state = None
+    else:
+        s = state["s"]
+        ys = []
+        for t in range(S):
+            rt_, kt, vt, wt = (
+                r4[:, t].astype(jnp.float32),
+                k4[:, t].astype(jnp.float32),
+                v4[:, t].astype(jnp.float32),
+                w4[:, t],
+            )
+            kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+            y_t = jnp.einsum("bhn,bhnm->bhm", rt_, s + u[None, :, :, None] * kv)
+            s = s * wt[..., None] + kv
+            ys.append(y_t)
+        y = jnp.stack(ys, axis=1).astype(x.dtype)
+        s_final = s
+        new_state = {"s": s_final, "shift": x[:, -1:]}
+
+    y = y.reshape(B, S, D)
+    y = rmsnorm(p["ln_out"], y) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"])
+    return rt.shard(out, "batch", None, None), new_state
+
+
+def channelmix_apply(
+    rt: Runtime,
+    p: dict,
+    x: jax.Array,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    xprev = _token_shift(x, None if state is None else state["shift"])
+    k = jnp.einsum("bsd,df->bsf", _lerp(x, xprev, p["mu"][0]), p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    k = rt.shard(k, "batch", None, "ff_act")
+    vv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", _lerp(x, xprev, p["mu"][1]), p["wr"])
+    )
+    out = rr * vv
+    new_state = None if state is None else {"shift": x[:, -1:]}
+    return rt.shard(out, "batch", None, None), new_state
+
+
+def rwkv6_state_specs(cfg: RWKV6Config, batch: int, n_layers: int) -> dict:
+    H, N, D = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "tm_s": ParamSpec(
+            (n_layers, batch, H, N, N),
+            ("layers", "batch", "ssm_heads", None, None),
+            init="zeros",
+            dtype=jnp.float32,
+        ),
+        "tm_shift": ParamSpec(
+            (n_layers, batch, 1, D), ("layers", "batch", None, None),
+            init="zeros", dtype=jnp.bfloat16,
+        ),
+        "cm_shift": ParamSpec(
+            (n_layers, batch, 1, D), ("layers", "batch", None, None),
+            init="zeros", dtype=jnp.bfloat16,
+        ),
+    }

@@ -1,0 +1,136 @@
+"""RWKV-6 language model (attention-free; pool arch ``rwkv6-1.6b``)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .param import ParamSpec, cast_floats, round_up, stack_specs
+from .rwkv6 import (
+    RWKV6Config,
+    channelmix_apply,
+    channelmix_specs,
+    rwkv6_state_specs,
+    timemix_apply,
+    timemix_specs,
+)
+
+
+@dataclass(frozen=True)
+class RWKVLMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 64
+    chunk: int = 128
+    remat_policy: str = "nothing"
+    unroll: bool = False
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def vocab_padded(self) -> int:
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def inner(self) -> RWKV6Config:
+        return RWKV6Config(
+            d_model=self.d_model, head_dim=self.head_dim, d_ff=self.d_ff,
+            chunk=self.chunk, unroll=self.unroll,
+        )
+
+
+def block_specs(cfg: RWKVLMConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(cfg.d_model),
+        "tm": timemix_specs(cfg.inner),
+        "ln2": L.layernorm_specs(cfg.d_model),
+        "cm": channelmix_specs(cfg.inner),
+    }
+
+
+def lm_specs(cfg: RWKVLMConfig) -> dict:
+    return {
+        "embed": L.embed_specs(cfg.vocab_padded, cfg.d_model),
+        "ln_in": L.layernorm_specs(cfg.d_model),
+        "blocks": stack_specs(block_specs(cfg), cfg.n_layers),
+        "final_norm": L.layernorm_specs(cfg.d_model),
+    }
+
+
+def _block(rt, cfg, p, x, state=None):
+    tm_state = None if state is None else {"s": state["tm_s"], "shift": state["tm_shift"]}
+    h, tm_new = timemix_apply(rt, p["tm"], L.layernorm(p["ln1"], x), cfg.inner, tm_state)
+    x = x + h
+    cm_state = None if state is None else {"shift": state["cm_shift"]}
+    h, cm_new = channelmix_apply(rt, p["cm"], L.layernorm(p["ln2"], x), cm_state)
+    x = x + h
+    new_state = None
+    if state is not None:
+        new_state = {
+            "tm_s": tm_new["s"],
+            "tm_shift": tm_new["shift"],
+            "cm_shift": cm_new["shift"],
+        }
+    return rt.shard(x, "batch", None, None), new_state
+
+
+def forward(rt, cfg: RWKVLMConfig, params, tokens):
+    params = cast_floats(params, cfg.dtype)
+    x = L.embed(rt, params["embed"], tokens)
+    x = L.layernorm(params["ln_in"], x).astype(cfg.dtype)
+
+    def body(h, lp):
+        h, _ = _block(rt, cfg, lp, h)
+        return h, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.unroll:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["blocks"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.layernorm(params["final_norm"], x)
+    return L.unembed(rt, params["embed"], x)
+
+
+def loss_fn(rt, cfg, params, batch):
+    logits = forward(rt, cfg, params, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def state_specs(cfg: RWKVLMConfig, batch: int) -> dict:
+    return rwkv6_state_specs(cfg.inner, batch, cfg.n_layers)
+
+
+def decode_step(rt, cfg: RWKVLMConfig, params, tokens, state, pos=None):
+    """One token through the recurrent form.  tokens: (B, 1)."""
+    params = cast_floats(params, cfg.dtype)
+    x = L.embed(rt, params["embed"], tokens)
+    x = L.layernorm(params["ln_in"], x).astype(cfg.dtype)
+
+    def body(h, xs):
+        lp, tm_s, tm_shift, cm_shift = xs
+        st = {"tm_s": tm_s, "tm_shift": tm_shift, "cm_shift": cm_shift}
+        h, new = _block(rt, cfg, lp, h, st)
+        return h, (new["tm_s"], new["tm_shift"], new["cm_shift"])
+
+    xs = (params["blocks"], state["tm_s"], state["tm_shift"], state["cm_shift"])
+    if cfg.unroll:
+        outs = []
+        for i in range(cfg.n_layers):
+            x, o = body(x, jax.tree.map(lambda t: t[i], xs))
+            outs.append(o)
+        tm_s, tm_shift, cm_shift = (
+            jnp.stack([o[j] for o in outs], axis=0) for j in range(3)
+        )
+    else:
+        x, (tm_s, tm_shift, cm_shift) = jax.lax.scan(body, x, xs)
+    x = L.layernorm(params["final_norm"], x)
+    logits = L.unembed(rt, params["embed"], x)
+    return logits, {"tm_s": tm_s, "tm_shift": tm_shift, "cm_shift": cm_shift}

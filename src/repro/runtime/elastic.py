@@ -1,0 +1,51 @@
+"""Elastic scaling: resume a job on a different DP width.
+
+Parameters and ZeRO-1 optimizer state are stored UNSHARDED in checkpoints
+(checkpoint/manager.py), so rescaling is: rebuild shardings for the new
+mesh, `restore(..., shardings=new)`, and rescale the data pipeline's
+global batch.  The only semantic knobs are batch/LR rescaling, handled
+here explicitly so restarts are bitwise-documented.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old_dp: int
+    new_dp: int
+    old_global_batch: int
+    keep_global_batch: bool = True     # True: same batch, different per-host
+    lr_scale: float = 1.0
+
+    @property
+    def new_global_batch(self) -> int:
+        if self.keep_global_batch:
+            if self.old_global_batch % self.new_dp:
+                raise ValueError(
+                    f"global batch {self.old_global_batch} not divisible by "
+                    f"new dp {self.new_dp}"
+                )
+            return self.old_global_batch
+        return self.old_global_batch * self.new_dp // self.old_dp
+
+    @property
+    def effective_lr_scale(self) -> float:
+        if self.keep_global_batch:
+            return 1.0
+        # linear-scaling rule when the batch actually changes
+        return self.lr_scale * self.new_dp / self.old_dp
+
+
+def rescale(
+    manager,
+    step: int,
+    tree_like,
+    new_shardings,
+    plan: ElasticPlan,
+):
+    """Restore a checkpoint onto the new mesh; returns (state, plan)."""
+    state = manager.restore(step, tree_like, shardings=new_shardings)
+    return state, plan

@@ -1,0 +1,133 @@
+"""Multi-ring / All2All planner + cost model + simulator tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alltoall, cost_model, multiring, simulator, traffic
+from repro.core.cost_model import Routing
+from repro.core.topology import ub_mesh_pod, ub_mesh_rack
+
+
+class TestMultiRing:
+    @given(st.integers(2, 24))
+    @settings(max_examples=23, deadline=None)
+    def test_clique_decomposition_covers_all_edges(self, n):
+        # verify=True asserts hamiltonicity + edge-disjoint + full coverage
+        rings, closed = multiring.clique_decomposition(n, verify=True)
+        expected = (n - 1) // 2 if n % 2 else n // 2
+        if n > 2:
+            assert len(rings) == expected
+
+    def test_multiring_beats_single_ring(self):
+        pod = ub_mesh_pod()
+        for dim in range(4):
+            plan = multiring.plan_multiring(pod, dim)
+            single = multiring.single_ring_bandwidth_gbs(pod, dim)
+            assert plan.effective_bandwidth_gbs() >= single
+            assert plan.utilization == 1.0  # every clique link carries traffic
+
+    def test_allreduce_wire_bytes(self):
+        pod = ub_mesh_pod()
+        plan = multiring.plan_multiring(pod, 0)  # X clique, n=8
+        wire = plan.allreduce_wire_bytes_per_chip(1e9)
+        assert np.isclose(wire, 2 * 7 / 8 * 1e9)
+
+
+class TestAllToAll:
+    def test_multipath_doubles_pair_bandwidth(self):
+        rack = ub_mesh_rack()
+        multi = alltoall.permutation_a2a_pair_bandwidth(rack, multipath=True)
+        single = alltoall.permutation_a2a_pair_bandwidth(rack, multipath=False)
+        assert multi == 2 * single
+
+    def test_uniform_a2a_balanced_one_hop_relay(self):
+        rack = ub_mesh_rack()
+        rep = alltoall.multipath_a2a_loads(rack, 1.0, split=True)
+        assert rep.max_hops <= 2          # at most one relay (Fig. 14-a)
+        assert rep.balance < 1.05         # near-perfect balance
+
+    def test_hierarchical_moe_dispatch_saves_long_links(self):
+        d, h = alltoall.hierarchical_moe_dispatch(n_cliques=8, topk=4)
+        assert h.long_link_bytes_per_token < d.long_link_bytes_per_token
+        # savings grow with topk (massive-expert models, paper §7)
+        s2 = alltoall.moe_dispatch_savings(8, 2)
+        s8 = alltoall.moe_dispatch_savings(8, 8)
+        assert s8 > s2 > 1.0
+
+
+class TestCostModel:
+    def test_detour_faster_than_shortest(self):
+        short = cost_model.build_comm_model(routing=Routing.SHORTEST)
+        detour = cost_model.build_comm_model(routing=Routing.DETOUR)
+        borrow = cost_model.build_comm_model(routing=Routing.BORROW)
+        size = 1e9
+        t_s = short.allreduce("data", size)
+        t_d = detour.allreduce("data", size)
+        t_b = borrow.allreduce("data", size)
+        assert t_b <= t_d <= t_s
+
+    def test_hierarchical_allreduce_cheaper_than_flat_on_slow_axis(self):
+        m = cost_model.build_comm_model(multi_pod=True)
+        size = 1e9
+        flat_slow = m.allreduce("pod", size)
+        hier = m.hierarchical_allreduce(["data", "pod"], size)
+        assert hier < flat_slow + m.allreduce("data", size)
+
+
+class TestTraffic:
+    def test_table1_locality(self):
+        w, p = traffic.moe_2t_workload()
+        tab = traffic.analyze_traffic(w, p)
+        assert tab.share("TP") + tab.share("SP") > 0.90     # paper: ~97%
+        assert tab.share("DP") < 0.02                        # paper: 1.34%
+        assert tab.share("PP") < 0.01
+        assert tab.local_share() > 0.95
+
+    def test_table1_share_values(self):
+        w, p = traffic.moe_2t_workload()
+        tab = traffic.analyze_traffic(w, p)
+        ref = traffic.PAPER_TABLE1
+        assert abs(tab.share("TP") - ref["TP"]["share"]) < 0.05
+        assert abs(tab.share("SP") - ref["SP"]["share"]) < 0.05
+        assert abs(tab.share("EP") - ref["EP"]["share"]) < 0.02
+
+
+class TestSimulator:
+    def test_intra_rack_ordering_fig17(self):
+        w = traffic.WorkloadSpec(
+            "GPT3-175B", 96, 12288, 96, 128, 8,
+            seq_len=8192, global_batch=2048, params_total=175e9,
+        )
+        p = traffic.ParallelSpec(tp=8, sp=8, pp=4, dp=256, microbatches=16)
+        times = {}
+        for variant in ("2D-FM", "1D-FM-A", "1D-FM-B", "Clos"):
+            cm = simulator.intra_rack_comm_model(variant)
+            times[variant] = simulator.simulate(w, p, cm).iteration_s
+        assert times["Clos"] <= times["1D-FM-B"] <= times["1D-FM-A"] <= times["2D-FM"]
+        # paper: 2D-FM >= 93% of Clos
+        assert times["Clos"] / times["2D-FM"] > 0.90
+
+    def test_linearity_above_95(self):
+        w = traffic.WorkloadSpec(
+            "GPT4-2T", 96, 12288, 96, 128, 8, seq_len=262144,
+            global_batch=64, params_total=2e12, n_experts=16, topk=2,
+        )
+        lin = simulator.linearity_curve(w, 1024, [1, 4, 16, 64])
+        assert all(v > 0.95 for v in lin.values())
+
+
+class TestPlanner:
+    def test_planner_prefers_local_tp_sp(self):
+        from repro.core import planner
+
+        w = traffic.WorkloadSpec(
+            "LLAMA-70B", 80, 8192, 64, 128, 8,
+            seq_len=8192, global_batch=1024, params_total=7e10,
+        )
+        cm = cost_model.build_comm_model(multi_pod=True)
+        best = planner.best_parallel_spec(w, 8192, cm)
+        # the high-volume TP*SP footprint should stay near the rack domain
+        assert best.tp * best.sp <= 16 * 64
+        assert best.dp >= 1
+        assert planner.memory_feasible(w, best)

@@ -1,0 +1,147 @@
+"""End-to-end integration: training convergence, checkpoint-restart
+equivalence, serving, and the dry-run machinery on a tiny mesh."""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Pipeline, SyntheticSource
+from repro.models.api import ShapeCell
+from repro.models.layers import Runtime
+from repro.models.param import tree_init
+from repro.optim import adamw
+
+
+def _train(harness, steps, params, opt_state, start=0, batch=8, seq=64):
+    rt = Runtime(rules=None)
+    loss_fn = harness.loss(rt)
+    cfg = adamw.OptConfig(lr=1e-3, warmup_steps=2, decay_steps=steps)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, m = adamw.apply(cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    dcfg = DataConfig(global_batch=batch, seq_len=seq, vocab_size=harness.cfg.vocab_size)
+    src = SyntheticSource(dcfg)
+    losses = []
+    for i in range(start, steps):
+        raw = src.batch_at(i)
+        b = {"tokens": jnp.asarray(raw[:, :-1]), "labels": jnp.asarray(raw[:, 1:])}
+        params, opt_state, loss = step(params, opt_state, b)
+        losses.append(float(loss))
+    return params, opt_state, losses
+
+
+class TestTrainingConvergence:
+    def test_loss_decreases_granite(self):
+        h = load("granite-8b", smoke=True)
+        params = tree_init(h.param_specs(), jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+        opt = adamw.init_opt_state(params)
+        _, _, losses = _train(h, 40, params, opt)
+        assert losses[-1] < losses[0] - 0.5
+
+    def test_loss_decreases_rwkv(self):
+        h = load("rwkv6-1.6b", smoke=True)
+        params = tree_init(h.param_specs(), jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+        opt = adamw.init_opt_state(params)
+        _, _, losses = _train(h, 40, params, opt)
+        assert losses[-1] < losses[0] - 0.5
+
+
+class TestCheckpointRestart:
+    def test_restart_is_equivalent(self, tmp_path):
+        """train 10 -> checkpoint -> train 10 more == train 20 straight"""
+        h = load("granite-3-2b", smoke=True)
+        params0 = tree_init(h.param_specs(), jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+        opt0 = adamw.init_opt_state(params0)
+
+        pA, oA, _ = _train(h, 20, params0, opt0)
+
+        pB, oB, _ = _train(h, 10, params0, adamw.init_opt_state(params0))
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(10, {"params": pB, "opt": oB}, blocking=True)
+        restored = mgr.restore(10, {"params": pB, "opt": oB})
+        pC, oC, _ = _train(h, 20, restored["params"], restored["opt"], start=10)
+
+        for a, c in zip(jax.tree.leaves(pA), jax.tree.leaves(pC)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(c, np.float32), atol=1e-2
+            )
+
+
+class TestServing:
+    def test_prefill_then_greedy_decode(self):
+        h = load("granite-8b", smoke=True)
+        params = tree_init(h.param_specs(), jax.random.PRNGKey(1), dtype=jnp.bfloat16)
+        cell = ShapeCell("t", "decode", 48, 2)
+        cache = tree_init(h.serve_state_specs(cell), jax.random.PRNGKey(0))
+        rt = Runtime(rules=None)
+        prompts = jnp.asarray(
+            np.random.default_rng(0).integers(0, 64, (2, 16)), jnp.int32
+        )
+        logits, cache = jax.jit(h.prefill(rt))(params, cache, prompts)
+        tok = jnp.argmax(logits[:, -1, : h.cfg.vocab_size], -1).astype(jnp.int32)
+        decode = jax.jit(h.decode(rt))
+        for i in range(4):
+            logits, cache = decode(params, cache, tok[:, None], jnp.asarray(16 + i))
+            tok = jnp.argmax(logits[:, -1, : h.cfg.vocab_size], -1).astype(jnp.int32)
+            assert int(tok.min()) >= 0 and int(tok.max()) < h.cfg.vocab_size
+
+
+class TestDryRunMachinery:
+    """The dry-run itself runs as a subprocess (needs its own XLA device
+    count); here we test the pieces importable under 1 device."""
+
+    def test_collective_stats_parser(self):
+        from repro.launch.hlo_stats import collective_stats
+
+        hlo = """
+  %ar = f32[1024,256]{1,0} all-reduce(f32[1024,256] %x), replica_groups=[32,16]<=[512], to_apply=%add
+  %ag = bf16[512]{0} all-gather(bf16[32] %y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %done = f32[8]{0} all-reduce-done(f32[8] %h)
+"""
+        st = collective_stats(hlo)
+        ar_wire = 2 * 15 / 16 * 1024 * 256 * 4
+        ag_wire = 3 / 4 * 512 * 2
+        assert abs(st.by_kind["all-reduce"] - ar_wire) < 1
+        assert abs(st.by_kind["all-gather"] - ag_wire) < 1
+        assert st.count == 2  # -done not double counted
+
+    def test_roofline_terms(self):
+        from repro.launch.hlo_stats import Roofline
+
+        r = Roofline(flops=1.97e14, hbm_bytes=8.19e11, wire_bytes=5e10, model_flops=1e14)
+        assert abs(r.compute_s - 1.0) < 1e-6
+        assert abs(r.memory_s - 1.0) < 1e-6
+        assert r.collective_s == 1.0
+        assert r.useful_flops_ratio == pytest.approx(0.5077, abs=1e-3)
+
+    def test_mesh_constructor_shapes(self):
+        # shape math only — actual 512-device construction happens in the
+        # dry-run subprocess
+        from repro.launch import mesh as mesh_mod
+
+        import inspect
+
+        src = inspect.getsource(mesh_mod.make_production_mesh)
+        assert "(2, 16, 16)" in src and "(16, 16)" in src
+        assert '"pod", "data", "model"' in src.replace("'", '"')
+
+    @pytest.mark.slow
+    def test_one_dryrun_cell_subprocess(self):
+        """compile one real cell on the 512-device mesh (slow ~1 min)"""
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "whisper-base", "--shape", "decode_32k", "--force"],
+            capture_output=True, text=True, timeout=1200,
+        )
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert " ok " in r.stdout

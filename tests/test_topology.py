@@ -1,0 +1,163 @@
+"""Core topology + APR unit & property tests."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apr, topology
+from repro.core.topology import DimSpec, NDFullMesh, PASSIVE_ELECTRICAL, ub_mesh_pod
+
+
+def small_mesh(shape=(3, 2, 2)):
+    return NDFullMesh(
+        dims=tuple(
+            DimSpec(f"D{i}", s, PASSIVE_ELECTRICAL, 2) for i, s in enumerate(shape)
+        )
+    )
+
+
+class TestNDFullMesh:
+    def test_pod_shape(self):
+        pod = ub_mesh_pod()
+        assert pod.num_nodes == 1024
+        assert pod.shape == (8, 8, 4, 4)
+
+    def test_coords_roundtrip(self):
+        t = small_mesh()
+        for n in range(t.num_nodes):
+            assert t.node_id(t.coords(n)) == n
+
+    def test_neighbors_are_single_dim(self):
+        t = small_mesh()
+        for n in range(t.num_nodes):
+            for peer, dim in t.all_neighbors(n):
+                assert t.are_adjacent(n, peer) == dim
+
+    def test_link_count_formula(self):
+        t = small_mesh((4, 3))
+        # dim0: 3 groups * C(4,2)=6 -> 18 ; dim1: 4 groups * C(3,2)=3 -> 12
+        assert t.link_count(0) == 18
+        assert t.link_count(1) == 12
+
+    def test_hop_distance_is_hamming(self):
+        t = small_mesh()
+        assert t.hop_distance(0, t.node_id((2, 1, 1))) == 3
+
+    @given(st.integers(0, 1023), st.integers(0, 1023))
+    @settings(max_examples=50, deadline=None)
+    def test_hop_distance_symmetric_pod(self, u, v):
+        pod = ub_mesh_pod()
+        assert pod.hop_distance(u, v) == pod.hop_distance(v, u)
+        assert pod.hop_distance(u, v) <= pod.ndim
+
+
+class TestAPR:
+    def test_shortest_path_count_is_factorial(self):
+        pod = ub_mesh_pod()
+        src = 0
+        dst = pod.node_id((1, 1, 1, 1))
+        paths = apr.shortest_paths(pod, src, dst)
+        assert len(paths) == 24  # 4 differing dims -> 4!
+        for p in paths:
+            assert len(p) == 5
+            assert p[0] == src and p[-1] == dst
+
+    @given(st.integers(0, 1023), st.integers(0, 1023))
+    @settings(max_examples=30, deadline=None)
+    def test_all_paths_valid(self, src, dst):
+        pod = ub_mesh_pod()
+        for p in apr.all_paths(pod, src, dst):
+            assert p[0] == src and p[-1] == dst
+            for a, b in zip(p, p[1:]):
+                assert pod.are_adjacent(a, b) is not None
+            assert len(set(p)) == len(p)  # loop-free
+
+    def test_sr_header_roundtrip(self):
+        pod = ub_mesh_pod()
+        paths = apr.all_paths(pod, 0, pod.node_id((1, 1, 0, 0)))
+        for p in paths[:10]:
+            hdr = apr.encode_path(pod, p)
+            assert apr.walk_header(pod, p[0], hdr) == p
+            assert len(hdr.pack()) == 8
+            assert apr.SourceRouteHeader.unpack(hdr.pack()) == hdr
+
+    def test_linear_table_routes(self):
+        pod = ub_mesh_pod()
+        lrt = apr.LinearRouteTable(pod)
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            s, d = rng.integers(0, pod.num_nodes, 2)
+            path = lrt.route(int(s), int(d))
+            assert path[0] == s and path[-1] == d
+            assert len(path) - 1 == pod.hop_distance(int(s), int(d))
+
+    def test_linear_table_space_is_linear(self):
+        pod = ub_mesh_pod()
+        lrt = apr.LinearRouteTable(pod)
+        # linear in sum(dims), NOT product: 1024 * (8+8+4+4)
+        assert lrt.table_entries() == 1024 * 24
+
+    def test_tfc_deadlock_free_random_traffic(self):
+        pod = ub_mesh_pod()
+        rng = np.random.default_rng(1)
+        paths = []
+        for _ in range(100):
+            s, d = rng.integers(0, pod.num_nodes, 2)
+            if s != d:
+                paths.extend(apr.all_paths(pod, int(s), int(d)))
+        assert apr.verify_deadlock_free(pod, paths, n_vls=2)
+
+    def test_tfc_admissible_nonempty(self):
+        pod = ub_mesh_pod()
+        paths = apr.all_paths(pod, 0, pod.node_id((1, 1, 1, 1)))
+        adm = apr.tfc_admissible(pod, paths)
+        assert len(adm) >= 1
+        # the in-dimension-order shortest path is always admissible
+        assert any(len(p) == 5 for p, _ in adm)
+
+    def test_reroute_avoids_failed_link(self):
+        pod = ub_mesh_pod()
+        plan = apr.RoutePlan(pod)
+        dst = pod.node_id((1, 1, 0, 0))
+        plan.install(0, dst, apr.shortest_paths(pod, 0, dst)[0])
+        link = (0, pod.node_id((1, 0, 0, 0)))
+        if plan.affected_flows(link):
+            fixed = plan.reroute(link)
+            for p in fixed.values():
+                edges = {tuple(sorted(e)) for e in zip(p, p[1:])}
+                assert tuple(sorted(link)) not in edges
+
+    def test_direct_notification_fewer_messages(self):
+        pod = ub_mesh_pod()
+        plan = apr.RoutePlan(pod)
+        rng = np.random.default_rng(2)
+        for _ in range(64):
+            s, d = rng.integers(0, pod.num_nodes, 2)
+            if s != d:
+                plan.install(int(s), int(d), apr.shortest_paths(pod, int(s), int(d))[0])
+        link = next(iter(plan._by_link))
+        direct = plan.direct_notify(link)
+        flood = plan.hop_by_hop_notify(link)
+        assert len(direct) <= pod.num_nodes
+        for src in direct:
+            assert direct[src] <= flood[src]
+
+
+class TestCables:
+    def test_table2_ratios(self):
+        sp = topology.SuperPod()
+        cb = sp.cables_by_link_type(uplink_provisioning=0.25)
+        tot = sum(cb.values())
+        frac = {k: v / tot for k, v in cb.items()}
+        # paper Table 2: 86.7 / 7.2 / 4.8 / 1.2
+        assert frac["passive_electrical"] > 0.80
+        assert frac["active_electrical"] < 0.12
+        assert frac["optical_100m"] + frac["optical_1km"] < 0.10
+
+    def test_switch_and_optics_savings(self):
+        sp = topology.SuperPod()
+        clos = topology.ClosFabric(8192)
+        assert 1 - sp.hrs_count() / clos.hrs_count() > 0.95      # paper: 98%
+        assert 1 - sp.optical_modules() / clos.optical_modules() > 0.90  # 93%
