@@ -1,0 +1,130 @@
+"""Netsim benchmarks: cross-validation against the analytic engine.
+
+Three claims, each one function (same (derived, ref) contract as
+``paper_tables.py``):
+
+* **crossval** — on an uncongested single-dimension clique the flow-level
+  simulator must reproduce the analytic multi-ring AllReduce time within
+  15% (it is the same schedule, executed instead of priced).
+* **fig19** — under cross-rack contention the §6.3 routing strategies must
+  rank Shortest < Detour < Borrow in delivered throughput (the Fig. 19
+  ordering), which only a contention-aware model can show.
+* **calibration** — netsim-measured effective axis bandwidths fed back
+  into ``core/simulator.simulate`` via ``axis_gbs_override`` (the
+  closed-form model is optimistic; the override quantifies by how much).
+
+``SMOKE_BENCHMARKS`` is the <30 s subset run by ``run.py --suite smoke``.
+"""
+
+from __future__ import annotations
+
+from repro.core.cost_model import Routing, build_comm_model
+from repro.core.multiring import plan_multiring
+from repro.core.simulator import simulate
+from repro.core.topology import ub_mesh_pod, ub_mesh_rack
+from repro.core.traffic import moe_2t_workload
+from repro.netsim import NetSim, hotspot_dag, inter_rack_mesh
+from repro.netsim.collectives import clique_nodes, ring_allreduce
+
+
+# ---------------------------------------------------------------------------
+# benchmarks
+# ---------------------------------------------------------------------------
+
+
+def netsim_crossval():
+    """Netsim vs analytic multi-ring AllReduce on uncongested cliques."""
+    derived = {}
+    worst = 0.0
+    size = 64e6
+    cases = [
+        ("rack-X8", ub_mesh_rack(), 0),       # even n=8: zig-zag chains
+        ("pod-Z4", ub_mesh_pod(), 2),         # even n=4, inter-rack lanes
+    ]
+    for label, topo, dim in cases:
+        sim = NetSim(topo, routing=Routing.DETOUR)
+        t = sim.allreduce_time(dim, size)
+        ta = plan_multiring(topo, dim).allreduce_time_s(size)
+        rel = abs(t - ta) / ta
+        worst = max(worst, rel)
+        derived[f"{label}_netsim_ms"] = round(t * 1e3, 4)
+        derived[f"{label}_analytic_ms"] = round(ta * 1e3, 4)
+        derived[f"{label}_rel_err"] = round(rel, 4)
+    derived["within_15pct"] = worst <= 0.15
+    ref = {"tolerance": 0.15}
+    return derived, ref
+
+
+def netsim_fig19():
+    """Shortest < Detour < Borrow throughput under cross-rack contention."""
+    topo = inter_rack_mesh()
+    dag = hotspot_dag(topo)
+    total = sum(t.size for t in dag.tasks)
+    tput = {}
+    for pol in (Routing.SHORTEST, Routing.DETOUR, Routing.BORROW):
+        r = NetSim(topo, routing=pol).run_dag(dag)
+        assert r.incomplete == 0, f"{pol}: {r.incomplete} tasks unfinished"
+        tput[pol.value] = total / r.makespan_s / 1e9
+    derived = {f"{k}_gbs": round(v, 1) for k, v in tput.items()}
+    derived["detour_vs_shortest"] = round(tput["detour"] / tput["shortest"], 3)
+    derived["borrow_vs_detour"] = round(tput["borrow"] / tput["detour"], 3)
+    derived["fig19_ordering"] = (
+        tput["shortest"] < tput["detour"] < tput["borrow"]
+    )
+    ref = {"ordering": "Shortest < Detour < Borrow (Fig. 19)"}
+    return derived, ref
+
+
+def netsim_failure():
+    """Mid-collective link failure: all flows still complete via APR."""
+    topo = ub_mesh_rack()
+    nodes = clique_nodes(topo, 0)
+    dag = ring_allreduce(topo, nodes, 64e6)
+    sim = NetSim(topo, routing=Routing.DETOUR)
+    ok = sim.run_dag(dag)
+    bad = sim.run_dag(
+        dag, fail_link=(nodes[0], nodes[1]), fail_at_s=ok.makespan_s / 4
+    )
+    derived = {
+        "healthy_ms": round(ok.makespan_s * 1e3, 4),
+        "failed_link_ms": round(bad.makespan_s * 1e3, 4),
+        "slowdown": round(bad.makespan_s / ok.makespan_s, 3),
+        "all_completed": bad.incomplete == 0,
+        "notify_hops": bad.failure_stats.get("max_notify_hops", 0),
+    }
+    ref = {"all_completed": True}
+    return derived, ref
+
+
+def netsim_calibration():
+    """Netsim effective-bandwidth override for the analytic simulator."""
+    pod = ub_mesh_pod()
+    sim = NetSim(pod, routing=Routing.DETOUR)
+    comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+    cal = sim.calibrated_axis_gbs(16e6, comm=comm)
+    w, p = moe_2t_workload()
+    base = simulate(w, p, comm)
+    calibrated = simulate(w, p, comm, axis_gbs_override=cal)
+    derived = {f"cal_{k}_gbs": round(v, 1) for k, v in cal.items()}
+    derived.update(
+        {f"model_{k}_gbs": round(a.gbs_per_chip, 1) for k, a in comm.axes.items()}
+    )
+    derived["iter_s_analytic"] = round(base.iteration_s, 3)
+    derived["iter_s_calibrated"] = round(calibrated.iteration_s, 3)
+    ref = {"note": "calibrated <= analytic (contention+schedule effects)"}
+    return derived, ref
+
+
+NETSIM_BENCHMARKS = {
+    "netsim_crossval": netsim_crossval,
+    "netsim_fig19": netsim_fig19,
+    "netsim_failure": netsim_failure,
+    "netsim_calibration": netsim_calibration,
+}
+
+# the <30s subset for `run.py --suite smoke`
+SMOKE_BENCHMARKS = {
+    "netsim_crossval": netsim_crossval,
+    "netsim_fig19": netsim_fig19,
+    "netsim_failure": netsim_failure,
+}

@@ -1,15 +1,21 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run                 # full suite
+    PYTHONPATH=src python -m benchmarks.run --suite smoke   # <30 s netsim CI
 
 Prints ``name,us_per_call,derived`` CSV; `derived` is `key=value|...` pairs
 of computed numbers with the paper's reference values interleaved as
 `ref:key=value` for direct comparison.  Kernel micro-benchmarks (interpret
 mode — CPU wall time, NOT TPU perf) are included for completeness.
+
+The ``smoke`` suite runs tiny flow-level netsim scenarios (cross-validation
+vs the analytic model, Fig. 19 routing-strategy ordering, link-failure
+recovery) so network-simulator regressions are caught by default.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -19,11 +25,26 @@ def _fmt(d: dict) -> str:
 
 
 def main() -> None:
-    from benchmarks.paper_tables import ALL_BENCHMARKS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=("full", "smoke"), default="full")
+    args = ap.parse_args()
 
     rows = []
     failures = 0
-    for name, fn in ALL_BENCHMARKS.items():
+    try:
+        from benchmarks.netsim_bench import NETSIM_BENCHMARKS, SMOKE_BENCHMARKS
+    except Exception as e:  # noqa: BLE001 - report as a row, don't kill suite
+        failures += 1
+        rows.append(f"netsim_bench,0,ERROR={type(e).__name__}:{e}")
+        NETSIM_BENCHMARKS, SMOKE_BENCHMARKS = {}, {}
+
+    if args.suite == "smoke":
+        benchmarks = SMOKE_BENCHMARKS
+    else:
+        from benchmarks.paper_tables import ALL_BENCHMARKS
+
+        benchmarks = {**ALL_BENCHMARKS, **NETSIM_BENCHMARKS}
+    for name, fn in benchmarks.items():
         t0 = time.perf_counter()
         try:
             derived, ref = fn()
@@ -35,14 +56,15 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             rows.append(f"{name},0,ERROR={type(e).__name__}:{e}")
-    # kernel micro-benches (interpret mode)
-    try:
-        from benchmarks.kernel_bench import kernel_benchmarks
+    # kernel micro-benches (interpret mode; full suite only)
+    if args.suite == "full":
+        try:
+            from benchmarks.kernel_bench import kernel_benchmarks
 
-        rows.extend(kernel_benchmarks())
-    except Exception as e:  # noqa: BLE001
-        failures += 1
-        rows.append(f"kernel_bench,0,ERROR={type(e).__name__}:{e}")
+            rows.extend(kernel_benchmarks())
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            rows.append(f"kernel_bench,0,ERROR={type(e).__name__}:{e}")
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -74,7 +74,21 @@ def simulate(
     *,
     name: str = "",
     rack_size: int = 64,
+    axis_gbs_override: dict[str, float] | None = None,
 ) -> SimResult:
+    """Analytic iteration-time simulation.
+
+    ``axis_gbs_override`` replaces the per-chip bandwidth of named axes —
+    the hook for netsim-calibrated *effective* bandwidths
+    (``repro.netsim.NetSim.calibrated_axis_gbs``), which price in the
+    contention and scheduling effects the closed-form model idealizes away.
+    """
+    if axis_gbs_override:
+        axes = {
+            k: replace(a, gbs_per_chip=axis_gbs_override.get(k, a.gbs_per_chip))
+            for k, a in comm.axes.items()
+        }
+        comm = CommModel(axes=axes, routing=comm.routing)
     traffic = analyze_traffic(w, p)
     compute_s = _compute_seconds(w, p)
 

@@ -57,6 +57,19 @@ def analytic_model_flops(harness, cell) -> float:
     return total
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` to one flat dict.
+
+    Depending on the jax/XLA version the call returns a dict, a list of
+    per-device dicts (we want device 0: SPMD devices are identical), or
+    None when analysis is unavailable.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
 def _probe_metrics(harness, cell, mesh, multi_pod) -> dict:
     """Compile one UNROLLED probe and return its per-device counters.
 
@@ -69,7 +82,7 @@ def _probe_metrics(harness, cell, mesh, multi_pod) -> dict:
     """
     bundle = build_bundle(harness, cell, mesh, multi_pod=multi_pod)
     compiled = lower_bundle(bundle, mesh).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_stats(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -222,7 +235,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, probes: bool = True) -> dic
     if probes:
         metrics = extrapolated_metrics(harness, cell, mesh, multi_pod)
     else:
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         coll = collective_stats(compiled.as_text())
         metrics = {
             "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,54 @@
+"""repro.netsim — flow-level discrete-event simulator of the UB-Mesh fabric.
+
+Where the analytic engine (``core/simulator.py``) prices collectives with
+closed-form alpha-beta costs per axis, netsim *executes* them: flows are
+mapped onto the concrete ``NDFullMesh`` links, share bandwidth max-min
+fairly, contend, detour, borrow switch capacity, and survive link failures
+— the phenomena §4 (All-Path Routing) and §5 (Multi-Ring) exist to handle.
+
+Module map (paper section -> module):
+
+* ``events``      — deterministic heapq event engine, virtual time
+                    (simulation substrate; no paper section)
+* ``flows``       — max-min fair-share fluid flows on the §3.1 nD-FullMesh
+                    links, per-dim ``gbs_per_peer`` capacities (Table 3)
+* ``routing``     — APR adapter (§4.1): shortest / detour / borrow path
+                    sets from ``core/apr.py`` as per-flow multi-path
+                    splits; direct-notification fast recovery (§4.2)
+* ``collectives`` — Multi-Ring AllReduce (§5.1, Fig. 13) and Multi-Path
+                    All2All (Fig. 14) schedules compiled into flow DAGs;
+                    Table-1 traffic entries mapped onto node groups
+* ``api``         — ``NetSim.run(workload, parallel_spec)`` facade,
+                    ``NetSimResult``, and the effective-bandwidth
+                    calibration that feeds ``core/simulator.simulate``'s
+                    ``axis_gbs_override`` (§6 evaluation loop)
+* ``scenarios``   — canonical traffic patterns (cross-rack hotspot,
+                    inter-rack mesh) shared by benchmarks and tests
+
+Quick start::
+
+    from repro.core.cost_model import Routing
+    from repro.core.topology import ub_mesh_rack
+    from repro.netsim import NetSim
+
+    sim = NetSim(ub_mesh_rack(), routing=Routing.DETOUR)
+    t = sim.allreduce_time(dim=0, size_bytes=64e6)   # one X clique
+"""
+
+from .api import NetSim, NetSimResult                      # noqa: F401
+from .collectives import (                                 # noqa: F401
+    FlowDAG,
+    FlowTask,
+    all_to_all,
+    clique_nodes,
+    compile_workload,
+    hierarchical_all_gather,
+    hierarchical_allreduce,
+    ring_all_gather,
+    ring_allreduce,
+    ring_reduce_scatter,
+)
+from .events import EventEngine                            # noqa: F401
+from .flows import FluidNetwork                            # noqa: F401
+from .routing import Router, Transfer                      # noqa: F401
+from .scenarios import hotspot_dag, inter_rack_mesh        # noqa: F401

@@ -1,0 +1,412 @@
+"""Collective -> flow-DAG compiler (netsim layer 4).
+
+Compiles the planner-side collective schedules into executable DAGs of
+``FlowTask``s with explicit dependencies:
+
+* **Multi-Ring AllReduce** (§5.1, Fig. 13) — ``core/multiring.py``'s clique
+  decomposition (Walecki cycles for odd n, zig-zag chains for even n) is
+  unrolled into 2(n-1) steps per ring, one task per (ring, step, position).
+  Each task carries two deps: the data dep (the chunk a node forwards at
+  step s is the one it received at step s-1) and the port dep (a node
+  serializes its own sends).  Chains are modeled as rings minus the
+  wrap-around edge — per-link load matches the schedule exactly, including
+  the paper's observation that even-n chains lose endpoint bandwidth.
+* **ReduceScatter / AllGather** — the (n-1)-step halves of the same rings.
+* **Hierarchical AllReduce / AllGather** — the cost model's schedule
+  (reduce-scatter up the dimension list, allreduce at the top, all-gather
+  back down) with phase barriers.
+* **All-to-All** (§5.1, Fig. 14) — one independent task per ordered pair;
+  the Router's multi-path split supplies the XY/YX partitioning.
+* **traffic-table compilation** — maps ``core/traffic.py`` entries
+  (TP/SP/EP/PP/DP) onto representative node groups of the concrete
+  topology, so a (workload, parallel spec) prices directly on the network.
+
+Ring steps are adjacent-pair transfers and are pinned ``single_path``: the
+multi-ring schedule already IS the multipath structure, so re-splitting
+them would double-count links.  A2A/P2P tasks use the router's policy.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+
+from ..core.multiring import clique_decomposition
+from ..core.topology import NDFullMesh
+from ..core.traffic import ParallelSpec, TrafficTable, WorkloadSpec, analyze_traffic
+
+Ring = tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class FlowTask:
+    """One point-to-point message inside a collective schedule."""
+
+    tid: int
+    src: int
+    dst: int
+    size: float                       # bytes
+    deps: tuple[int, ...] = ()
+    single_path: bool = False         # ring steps pin their direct link
+    tag: str = ""
+
+
+@dataclass
+class FlowDAG:
+    """A dependency DAG of transfers; completion = all tasks done."""
+
+    name: str
+    tasks: list[FlowTask] = field(default_factory=list)
+
+    def _add(self, **kw) -> FlowTask:
+        t = FlowTask(tid=len(self.tasks), **kw)
+        self.tasks.append(t)
+        return t
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(t.size for t in self.tasks)
+
+    def frontier(self) -> tuple[int, ...]:
+        """Tasks no other task depends on (the DAG's exit set)."""
+        dep_of = {d for t in self.tasks for d in t.deps}
+        return tuple(t.tid for t in self.tasks if t.tid not in dep_of)
+
+
+# ---------------------------------------------------------------------------
+# clique helpers
+# ---------------------------------------------------------------------------
+
+
+def clique_nodes(
+    topo: NDFullMesh, dim: int, fixed: dict[int, int] | None = None
+) -> list[int]:
+    """Node ids of one clique along ``dim`` (other coords from ``fixed``,
+    defaulting to 0)."""
+    fixed = dict(fixed or {})
+    for i in range(topo.ndim):
+        if i != dim:
+            fixed.setdefault(i, 0)
+    fixed.pop(dim, None)
+    return topo.subgroup_nodes(fixed)
+
+
+# ---------------------------------------------------------------------------
+# ring-schedule compilers
+# ---------------------------------------------------------------------------
+
+
+def _ring_steps(
+    dag: FlowDAG,
+    nodes: list[int],
+    rings: list[Ring],
+    closed: bool,
+    n_steps: int,
+    chunk: float,
+    deps0: tuple[int, ...],
+    tag: str,
+) -> None:
+    """Unroll ``n_steps`` pipeline steps of every ring.
+
+    Task (s, i) = position i's send at step s.  Deps: the data dep
+    (s-1, i-1) — the chunk forwarded at step s arrived at step s-1 — and
+    the port dep (s-1, i) — each node serializes its own injections (this
+    keeps dep-less chain heads from bursting all their steps at once).
+    """
+    for r, ring in enumerate(rings):
+        m = len(ring)
+        prev: dict[int, int] = {}       # sender position -> step-(s-1) tid
+        for s in range(n_steps):
+            cur: dict[int, int] = {}
+            senders = range(m) if closed else range(m - 1)
+            for i in senders:
+                j = (i + 1) % m
+                if s == 0:
+                    deps = deps0
+                else:
+                    deps = tuple(
+                        prev[k]
+                        for k in ((i - 1) % m if closed else i - 1, i)
+                        if k in prev
+                    )
+                t = dag._add(
+                    src=nodes[ring[i]],
+                    dst=nodes[ring[j]],
+                    size=chunk,
+                    deps=deps,
+                    single_path=True,
+                    tag=f"{tag}/r{r}s{s}",
+                )
+                cur[i] = t.tid
+            prev = cur
+
+
+def _ring_collective(
+    topo: NDFullMesh,
+    nodes: list[int],
+    size_bytes: float,
+    n_steps_fn,
+    deps0: tuple[int, ...],
+    dag: FlowDAG | None,
+    tag: str,
+) -> FlowDAG:
+    dag = dag or FlowDAG(name=tag)
+    n = len(nodes)
+    if n < 2 or size_bytes <= 0:
+        return dag
+    rings, closed = clique_decomposition(n, verify=False)
+    chunk = size_bytes / (max(1, len(rings)) * n)
+    _ring_steps(dag, nodes, rings, closed, n_steps_fn(n), chunk, deps0, tag)
+    return dag
+
+
+def ring_allreduce(
+    topo: NDFullMesh,
+    nodes: list[int],
+    size_bytes: float,
+    *,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "allreduce",
+) -> FlowDAG:
+    """Multi-ring AllReduce over one clique's ``nodes``: 2(n-1) steps,
+    per-ring chunk = size / (rings * n) — wire bytes per chip equal the
+    analytic 2(n-1)/n * size."""
+    return _ring_collective(
+        topo, nodes, size_bytes, lambda n: 2 * (n - 1), deps0, dag, tag
+    )
+
+
+def ring_reduce_scatter(
+    topo: NDFullMesh,
+    nodes: list[int],
+    size_bytes: float,
+    *,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "rs",
+) -> FlowDAG:
+    """(n-1)-step half of the ring schedule; ``size_bytes`` is the per-node
+    input (RS) or gathered output (AG) size, matching the cost model."""
+    return _ring_collective(
+        topo, nodes, size_bytes, lambda n: n - 1, deps0, dag, tag
+    )
+
+
+ring_all_gather = ring_reduce_scatter      # same wire schedule, reversed data
+
+
+def all_to_all(
+    topo: NDFullMesh,
+    nodes: list[int],
+    per_pair_bytes: float,
+    *,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "a2a",
+) -> FlowDAG:
+    """Uniform A2A: one independent task per ordered pair; the router's
+    policy supplies the Fig. 14 multi-path splitting."""
+    dag = dag or FlowDAG(name=tag)
+    for src, dst in itertools.permutations(nodes, 2):
+        dag._add(src=src, dst=dst, size=per_pair_bytes, deps=deps0, tag=tag)
+    return dag
+
+
+def _cliques_of(
+    topo: NDFullMesh,
+    dim: int,
+    dims: tuple[int, ...],
+    sub_fixed: dict[int, int],
+    dim_coords: dict[int, tuple[int, ...]] | None = None,
+) -> list[list[int]]:
+    """Every clique of ``dim`` inside the subgroup spanned by ``dims``.
+
+    ``dim_coords`` restricts a dimension to a coordinate subset (a subset
+    of a clique is still a clique), so a 16-chip TP group can span the
+    full X clique but only 2 of the 8 Y boards.
+    """
+
+    def coords_for(d: int) -> tuple[int, ...]:
+        if dim_coords and d in dim_coords:
+            return tuple(dim_coords[d])
+        return tuple(range(topo.shape[d]))
+
+    others = [d for d in dims if d != dim]
+    out = []
+    for combo in itertools.product(*(coords_for(d) for d in others)):
+        fixed = dict(sub_fixed)
+        fixed.update(dict(zip(others, combo)))
+        clique = clique_nodes(topo, dim, fixed)
+        keep = set(coords_for(dim))
+        out.append([n for n in clique if topo.coords(n)[dim] in keep])
+    return out
+
+
+def hierarchical_allreduce(
+    topo: NDFullMesh,
+    dims: tuple[int, ...],
+    size_bytes: float,
+    *,
+    base_node: int = 0,
+    dim_coords: dict[int, tuple[int, ...]] | None = None,
+    dag: FlowDAG | None = None,
+    tag: str = "hier-ar",
+) -> FlowDAG:
+    """RS up ``dims[:-1]``, AllReduce on ``dims[-1]``, AG back down — the
+    cost model's hierarchical schedule on the subgroup of ``dims`` that
+    contains ``base_node``, with phase barriers between dims.
+    ``dim_coords`` narrows a dimension to a coordinate subset (partial-
+    width groups like a 16-chip TP domain inside the 64-chip rack)."""
+    dag = dag or FlowDAG(name=tag)
+    base = topo.coords(base_node)
+    sub_fixed = {i: base[i] for i in range(topo.ndim) if i not in dims}
+
+    def width(d: int) -> int:
+        return len(dim_coords[d]) if dim_coords and d in dim_coords else topo.shape[d]
+
+    frontier: tuple[int, ...] = ()
+    frac = size_bytes
+    for phase, dim in enumerate(dims[:-1]):
+        start = len(dag.tasks)
+        for nodes in _cliques_of(topo, dim, dims, sub_fixed, dim_coords):
+            ring_reduce_scatter(
+                topo, nodes, frac, deps0=frontier, dag=dag,
+                tag=f"{tag}/rs{phase}",
+            )
+        frontier = tuple(range(start, len(dag.tasks)))
+        frac /= width(dim)
+    start = len(dag.tasks)
+    for nodes in _cliques_of(topo, dims[-1], dims, sub_fixed, dim_coords):
+        ring_allreduce(topo, nodes, frac, deps0=frontier, dag=dag, tag=f"{tag}/ar")
+    frontier = tuple(range(start, len(dag.tasks)))
+    for phase, dim in enumerate(reversed(dims[:-1])):
+        frac *= width(dim)
+        start = len(dag.tasks)
+        for nodes in _cliques_of(topo, dim, dims, sub_fixed, dim_coords):
+            ring_all_gather(
+                topo, nodes, frac, deps0=frontier, dag=dag,
+                tag=f"{tag}/ag{phase}",
+            )
+        frontier = tuple(range(start, len(dag.tasks)))
+    return dag
+
+
+def hierarchical_all_gather(
+    topo: NDFullMesh,
+    dims: tuple[int, ...],
+    size_bytes: float,
+    *,
+    base_node: int = 0,
+    dim_coords: dict[int, tuple[int, ...]] | None = None,
+    dag: FlowDAG | None = None,
+    tag: str = "hier-ag",
+) -> FlowDAG:
+    """AG fast dim first, growing the gathered tile each phase;
+    ``size_bytes`` is the final gathered size per node."""
+    dag = dag or FlowDAG(name=tag)
+    base = topo.coords(base_node)
+    sub_fixed = {i: base[i] for i in range(topo.ndim) if i not in dims}
+
+    def width(d: int) -> int:
+        return len(dim_coords[d]) if dim_coords and d in dim_coords else topo.shape[d]
+
+    span = math.prod(width(d) for d in dims)
+    frac = size_bytes / span
+    frontier: tuple[int, ...] = ()
+    for phase, dim in enumerate(dims):
+        frac *= width(dim)
+        start = len(dag.tasks)
+        for nodes in _cliques_of(topo, dim, dims, sub_fixed, dim_coords):
+            ring_all_gather(
+                topo, nodes, frac, deps0=frontier, dag=dag,
+                tag=f"{tag}/ag{phase}",
+            )
+        frontier = tuple(range(start, len(dag.tasks)))
+    return dag
+
+
+# ---------------------------------------------------------------------------
+# traffic-table compilation (core/traffic.py -> DAGs)
+# ---------------------------------------------------------------------------
+
+
+def _model_group(topo: NDFullMesh, width: int) -> list[int]:
+    """A representative TP/SP group: one X clique widened across Y boards
+    until ``width`` chips (the intra-rack high-bandwidth domain)."""
+    x = topo.shape[0]
+    boards = max(1, min(topo.shape[1] if topo.ndim > 1 else 1, -(-width // x)))
+    nodes: list[int] = []
+    for y in range(boards):
+        nodes.extend(clique_nodes(topo, 0, {1: y} if topo.ndim > 1 else None))
+    return nodes[:width]
+
+
+def compile_traffic_entry(
+    topo: NDFullMesh,
+    technique: str,
+    per_transfer_bytes: float,
+    p: ParallelSpec,
+) -> FlowDAG:
+    """One transfer of one Table-1 technique as a flow DAG on ``topo``."""
+    x = topo.shape[0]
+    if technique in ("TP", "SP"):
+        group = _model_group(topo, p.tp * p.sp)
+        if len(group) <= x:
+            fn = ring_allreduce if technique == "TP" else ring_all_gather
+            return fn(topo, group, per_transfer_bytes, tag=technique)
+        # partial-width group: full X clique x only the Y boards in use
+        boards = -(-len(group) // x)
+        coords = {0: tuple(range(x)), 1: tuple(range(boards))}
+        fn = (
+            hierarchical_allreduce if technique == "TP"
+            else hierarchical_all_gather
+        )
+        return fn(
+            topo, (0, 1), per_transfer_bytes, dim_coords=coords, tag=technique
+        )
+    if technique == "EP":
+        group = _model_group(topo, min(p.ep * 2, 2 * x))
+        per_pair = per_transfer_bytes / max(1, len(group) - 1)
+        return all_to_all(topo, group, per_pair, tag="EP")
+    if technique == "PP":
+        # boundary activations hop to the next rack (first inter-rack dim)
+        dag = FlowDAG(name="PP")
+        inter = 2 if topo.ndim > 2 else topo.ndim - 1
+        peers = clique_nodes(topo, inter)
+        peer = peers[1] if len(peers) > 1 else 0
+        dag._add(src=0, dst=peer, size=per_transfer_bytes, tag="PP")
+        return dag
+    if technique == "DP":
+        dims = tuple(range(2, topo.ndim)) if topo.ndim > 2 else (topo.ndim - 1,)
+        return hierarchical_allreduce(topo, dims, per_transfer_bytes, tag="DP")
+    raise ValueError(f"unknown technique {technique}")
+
+
+def compile_workload(
+    topo: NDFullMesh, w: WorkloadSpec, p: ParallelSpec
+) -> dict[str, tuple[FlowDAG, float]]:
+    """technique -> (one-transfer DAG, effective transfer count).
+
+    Each technique is compiled once at its largest per-transfer volume; the
+    effective count scales the simulated single-transfer time back to the
+    technique's total bytes (SP's two size classes fold into one)."""
+    table: TrafficTable = analyze_traffic(w, p)
+    vols: dict[str, float] = {}
+    totals: dict[str, float] = {}
+    for e in table.entries:
+        vol = e.volume_per_transfer
+        if e.technique == "EP":
+            vol *= p.ep                # ledger stores the per-peer chunk
+        vols[e.technique] = max(vols.get(e.technique, 0.0), vol)
+        totals[e.technique] = totals.get(e.technique, 0.0) + (
+            e.total_bytes * (p.ep if e.technique == "EP" else 1)
+        )
+    out: dict[str, tuple[FlowDAG, float]] = {}
+    for tech, vol in vols.items():
+        out[tech] = (
+            compile_traffic_entry(topo, tech, vol, p),
+            totals[tech] / vol,
+        )
+    return out

@@ -1,0 +1,294 @@
+"""Fluid flow model with max-min fair bandwidth sharing (netsim layer 2).
+
+Flows are fluid: each active flow drains at a rate set by progressive-
+filling max-min fairness over the *directed* links it traverses (full-mesh
+links are full-duplex, so each physical cable contributes one directed link
+per direction at the dimension's ``gbs_per_peer``).  Between events the
+rates are constant, so the next state change is the earliest flow
+completion — the classic flow-level discrete-event scheme (cf. flow-level
+validation in Rail-only / RailX).
+
+The link inventory comes straight from ``core/topology.NDFullMesh``: every
+``(u, v, dim)`` edge becomes two directed links of capacity
+``dims[dim].gbs_per_peer``.  Extra links (e.g. the Borrow strategy's
+switch-plane uplinks) can be added on top.
+
+Invariants maintained (and unit-tested):
+* sum of flow rates on a link never exceeds its capacity,
+* bytes delivered per flow equals the requested flow size,
+* identical scenarios produce identical event traces (determinism).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+from ..core.topology import NDFullMesh
+from .events import Event, EventEngine
+
+DirectedLink = tuple[int, int]          # (u, v), u -> v
+
+_EPS_BYTES = 1e-6                       # "done" threshold
+_EPS_RATE = 1e-12
+
+
+@dataclass
+class Flow:
+    """One fluid flow on one explicit path."""
+
+    fid: int
+    path: tuple[int, ...]
+    size: float                          # bytes requested
+    remaining: float                     # bytes left to send
+    on_complete: Callable[["Flow"], None] | None = None
+    meta: object = None                  # opaque owner handle (Transfer, task)
+    rate: float = 0.0                    # bytes/s, set by the allocator
+    start_s: float = 0.0
+    end_s: float | None = None
+    links: tuple[DirectedLink, ...] = ()   # consecutive path pairs, cached
+
+    def __post_init__(self) -> None:
+        self.links = tuple(zip(self.path, self.path[1:]))
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= _EPS_BYTES
+
+
+class FluidNetwork:
+    """Directed-capacitated network running fluid flows on an EventEngine."""
+
+    def __init__(
+        self,
+        topo: NDFullMesh,
+        engine: EventEngine | None = None,
+        *,
+        record_rates: bool = False,
+    ) -> None:
+        self.topo = topo
+        self.engine = engine or EventEngine()
+        self.capacity: dict[DirectedLink, float] = {}    # bytes/s
+        for u, v, d in topo.links():
+            gbs = topo.dims[d].gbs_per_peer * 1e9
+            self.capacity[(u, v)] = gbs
+            self.capacity[(v, u)] = gbs
+        self.failed: set[DirectedLink] = set()
+        self.flows: dict[int, Flow] = {}                 # active flows
+        self.completed: dict[int, Flow] = {}
+        self._next_fid = 0
+        self._last_update = 0.0
+        self._completion_ev: Event | None = None
+        self._flush_ev: Event | None = None
+        self._dirty = False
+        self._in_completion = False
+        self.link_bytes: dict[DirectedLink, float] = {}  # delivered per link
+        self.record_rates = record_rates
+        self.rate_log: list[tuple[float, DirectedLink, float, float]] = []
+
+    # -- topology edits ----------------------------------------------------
+    def add_link(self, u: int, v: int, gbs: float, *, duplex: bool = True) -> None:
+        """Add an extra directed link (e.g. a switch-plane uplink)."""
+        self.capacity[(u, v)] = gbs * 1e9
+        if duplex:
+            self.capacity[(v, u)] = gbs * 1e9
+
+    def fail_link(self, u: int, v: int) -> list[Flow]:
+        """Zero both directions of u-v; returns the flows that crossed it."""
+        self._advance()
+        self.failed |= {(u, v), (v, u)}
+        hit = [
+            f for f in self.flows.values()
+            if (u, v) in f.links or (v, u) in f.links
+        ]
+        self._mark_dirty()
+        return hit
+
+    def link_ok(self, u: int, v: int) -> bool:
+        return (u, v) in self.capacity and (u, v) not in self.failed
+
+    def effective_capacity(self, link: DirectedLink) -> float:
+        return 0.0 if link in self.failed else self.capacity.get(link, 0.0)
+
+    # -- flow lifecycle ----------------------------------------------------
+    def add_flow(
+        self,
+        path: tuple[int, ...],
+        size: float,
+        on_complete: Callable[[Flow], None] | None = None,
+        meta: object = None,
+    ) -> Flow:
+        fid = self._next_fid
+        self._next_fid += 1
+        flow = Flow(
+            fid=fid,
+            path=tuple(path),
+            size=float(size),
+            remaining=float(size),
+            on_complete=on_complete,
+            meta=meta,
+            start_s=self.engine.now,
+        )
+        for l in flow.links:
+            if l not in self.capacity:
+                raise ValueError(f"path {path} uses nonexistent link {l}")
+        if len(path) < 2 or size <= _EPS_BYTES:
+            # degenerate: local copy, completes instantly
+            flow.remaining = 0.0
+            flow.end_s = self.engine.now
+            self.completed[fid] = flow
+            if on_complete:
+                on_complete(flow)
+            return flow
+        self._advance()
+        self.flows[fid] = flow
+        self._mark_dirty()
+        return flow
+
+    def remove_flow(self, flow: Flow) -> float:
+        """Withdraw an active flow; returns its un-sent bytes."""
+        self._advance()
+        self.flows.pop(flow.fid, None)
+        self._mark_dirty()
+        return max(0.0, flow.remaining)
+
+    # -- fluid mechanics ---------------------------------------------------
+    def _advance(self) -> None:
+        """Accrue bytes sent at current rates since the last state change."""
+        now = self.engine.now
+        dt = now - self._last_update
+        self._last_update = now
+        if dt <= 0:
+            return
+        for f in self.flows.values():
+            if f.rate > _EPS_RATE:
+                moved = min(f.remaining, f.rate * dt)
+                f.remaining -= moved
+                for l in f.links:
+                    self.link_bytes[l] = self.link_bytes.get(l, 0.0) + moved
+
+    def _maxmin_rates(self) -> None:
+        """Progressive filling: saturate the tightest link level-by-level.
+
+        All links at the current minimum fair share freeze together (one
+        water-filling level per round), which collapses the symmetric
+        collective case — every ring link equally loaded — to one round.
+        """
+        active = [self.flows[k] for k in sorted(self.flows)]
+        for f in active:
+            f.rate = 0.0
+        residual: dict[DirectedLink, float] = {}
+        count: dict[DirectedLink, int] = {}
+        flows_on: dict[DirectedLink, list[Flow]] = {}
+        for f in active:
+            for l in f.links:
+                if l not in residual:
+                    residual[l] = self.effective_capacity(l)
+                    count[l] = 0
+                    flows_on[l] = []
+                count[l] += 1
+                flows_on[l].append(f)
+        frozen: set[int] = set()
+        n_left = len(active)
+        while n_left > 0:
+            best = math.inf
+            for l, c in count.items():
+                if c > 0:
+                    share = residual[l] / c
+                    if share < best:
+                        best = share
+            if not math.isfinite(best):
+                break
+            level = best * (1 + 1e-12) + 1e-9
+            for l in list(count):
+                if count[l] <= 0 or residual[l] / count[l] > level:
+                    continue
+                for f in flows_on[l]:
+                    if f.fid in frozen:
+                        continue
+                    f.rate = best
+                    frozen.add(f.fid)
+                    n_left -= 1
+                    for fl in f.links:
+                        residual[fl] = max(0.0, residual[fl] - best)
+                        count[fl] -= 1
+        if self.record_rates:
+            used: dict[DirectedLink, float] = {}
+            for f in active:
+                for l in f.links:
+                    used[l] = used.get(l, 0.0) + f.rate
+            for l in sorted(used):
+                self.rate_log.append(
+                    (self.engine.now, l, used[l], self.effective_capacity(l))
+                )
+
+    def _mark_dirty(self) -> None:
+        """Request a rate recompute; same-timestamp changes batch into one
+        zero-delay flush so a 50-flow collective step costs one allocation,
+        not fifty."""
+        self._dirty = True
+        if self._in_completion:
+            return  # the completion handler recomputes once at exit
+        if self._flush_ev is None:
+            self._flush_ev = self.engine.schedule(0.0, self._flush)
+
+    def _flush(self) -> None:
+        self._flush_ev = None
+        if self._dirty:
+            self._recompute()
+
+    def _recompute(self) -> None:
+        if self._in_completion:
+            self._dirty = True
+            return  # batched: the completion handler recomputes once at exit
+        self._dirty = False
+        self._maxmin_rates()
+        if self._completion_ev is not None:
+            self._completion_ev.cancel()
+            self._completion_ev = None
+        ttc = math.inf
+        for f in self.flows.values():
+            if f.rate > _EPS_RATE:
+                ttc = min(ttc, f.remaining / f.rate)
+        if math.isfinite(ttc):
+            self._completion_ev = self.engine.schedule(
+                max(0.0, ttc), self._on_completion
+            )
+
+    def _on_completion(self) -> None:
+        self._completion_ev = None
+        self._advance()
+        done = [self.flows[k] for k in sorted(self.flows) if self.flows[k].done]
+        self._in_completion = True
+        try:
+            for f in done:
+                del self.flows[f.fid]
+                f.remaining = 0.0
+                f.end_s = self.engine.now
+                self.completed[f.fid] = f
+            for f in done:
+                if f.on_complete:
+                    f.on_complete(f)
+        finally:
+            self._in_completion = False
+        self._recompute()
+
+    # -- results -----------------------------------------------------------
+    def run(self, until: float | None = None) -> float:
+        return self.engine.run(until=until)
+
+    def utilization(self, elapsed_s: float | None = None) -> dict[DirectedLink, float]:
+        """Per-link mean utilization over ``elapsed_s`` (default: now)."""
+        t = elapsed_s if elapsed_s is not None else self.engine.now
+        if t <= 0:
+            return {l: 0.0 for l in self.link_bytes}
+        return {
+            l: b / (self.capacity[l] * t)
+            for l, b in sorted(self.link_bytes.items())
+        }
+
+    @property
+    def bytes_delivered(self) -> float:
+        """Total bytes delivered end-to-end (per-flow, not per-link)."""
+        return sum(f.size for f in self.completed.values())

@@ -1,0 +1,39 @@
+"""Canonical netsim scenarios shared by benchmarks and tests.
+
+Keeping these in the package (rather than duplicated in
+``benchmarks/netsim_bench.py`` and ``tests/test_netsim.py``) means the
+benchmark and the regression test always validate the *same* traffic
+pattern.
+"""
+
+from __future__ import annotations
+
+from ..core.topology import ACTIVE_ELECTRICAL, DimSpec, NDFullMesh, OPTICAL_100M
+from .collectives import FlowDAG
+
+
+def inter_rack_mesh(z: int = 4, a: int = 4) -> NDFullMesh:
+    """Rack-level 2D-FullMesh: the (Z, A) inter-rack fabric of one pod."""
+    return NDFullMesh(
+        dims=(
+            DimSpec("Z", z, ACTIVE_ELECTRICAL, 2),
+            DimSpec("A", a, OPTICAL_100M, 2),
+        )
+    )
+
+
+def hotspot_dag(topo: NDFullMesh, size: float = 8e6) -> FlowDAG:
+    """Cross-rack hotspot: in every row a, rack (0,a) sends to (1, a+k) for
+    k=0..2 — the three dimension-ordered paths collide on link
+    (0,a)->(1,a) while other links idle.  Multipath routes around it, which
+    is what separates the §6.3 strategies (Fig. 19 ordering)."""
+    dag = FlowDAG(name="hotspot")
+    for a in range(topo.shape[1]):
+        for k in range(3):
+            dag._add(
+                src=topo.node_id((0, a)),
+                dst=topo.node_id((1, (a + k) % topo.shape[1])),
+                size=size,
+                tag=f"h{a}.{k}",
+            )
+    return dag

@@ -1,0 +1,50 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+``hypothesis`` is a dev-only dependency (declared in pyproject.toml's
+``dev`` extra).  When it is installed, this module re-exports the real
+``given`` / ``settings`` / ``strategies``.  When it is absent, it provides
+stand-ins whose ``@given`` marks the test with ``pytest.mark.skip`` — so
+the property tests skip cleanly while every example-based test in the same
+module still collects and runs (the seed behavior was an ImportError that
+killed collection of all four modules).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis missing
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return _SKIP(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategy:
+        """Inert placeholder: builds no values, supports chained calls."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or skip-shim
 
 from repro.core import alltoall, cost_model, multiring, simulator, traffic
 from repro.core.cost_model import Routing
