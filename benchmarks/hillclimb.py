@@ -8,6 +8,13 @@ Runs the three chosen cells (worst roofline fraction / most collective-bound
 ladders, measuring the probe-extrapolated roofline terms for each change.
 
     PYTHONPATH=src python -m benchmarks.hillclimb [--cell granite] [--quick]
+    PYTHONPATH=src python -m benchmarks.hillclimb --perf-model netsim
+
+``--perf-model`` re-prices each variant's collective wire bytes on a
+``core.perf_model.PerfModel`` backend's UB-Mesh model axis (analytic
+idealized bandwidth, or the netsim-calibrated effective bandwidth), shown
+as the ``ub_coll`` column — what the variant's collective term would cost
+on the paper's fabric instead of the v5e ICI constant.
 
 Writes results/perf/<cell>__<variant>.json; EXPERIMENTS.md §Perf narrates
 the hypothesis log.
@@ -128,11 +135,31 @@ def measure(arch: str, shape: str, overrides: dict, multi_pod=False) -> dict:
     }
 
 
+def ubmesh_model_axis_gbs(backend: str) -> float:
+    """Per-chip model-axis bandwidth from a PerfModel backend — the price a
+    variant's collective wire bytes would pay on the UB-Mesh fabric."""
+    from repro.core.cost_model import Routing, build_comm_model
+
+    comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+    if backend == "netsim":
+        from repro.core.perf_model import NetsimPerfModel
+
+        perf = NetsimPerfModel(comm)
+    else:
+        perf = comm
+    return perf.comm_model(None).axes["model"].gbs_per_chip
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default=None, choices=[*CELLS, None])
+    ap.add_argument(
+        "--perf-model", default=None, choices=("analytic", "netsim"),
+        help="also price collective wire bytes on this UB-Mesh PerfModel backend",
+    )
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
+    ub_gbs = ubmesh_model_axis_gbs(args.perf_model) if args.perf_model else None
 
     cells = [args.cell] if args.cell else list(CELLS)
     for cname in cells:
@@ -157,9 +184,14 @@ def main():
                 f"{(t / b - 1) * 100:+.1f}%" if b else "n/a"
                 for t, b in zip(terms, base_terms)
             )
+            ub = (
+                f"ub_coll={r['wire_bytes'] / (ub_gbs * 1e9):.3f}s "
+                if ub_gbs
+                else ""
+            )
             print(f"  {vname:18s} comp={terms[0]:.3f}s ({deltas[0]}) "
                   f"mem={terms[1]:.3f}s ({deltas[1]}) "
-                  f"coll={terms[2]:.3f}s ({deltas[2]}) "
+                  f"coll={terms[2]:.3f}s ({deltas[2]}) {ub}"
                   f"useful={r['useful_flops_ratio']:.2f} "
                   f"peak={rec['peak_gb']}GB", flush=True)
 

@@ -10,8 +10,9 @@ Three claims, each one function (same (derived, ref) contract as
   rank Shortest < Detour < Borrow in delivered throughput (the Fig. 19
   ordering), which only a contention-aware model can show.
 * **calibration** — netsim-measured effective axis bandwidths fed back
-  into ``core/simulator.simulate`` via ``axis_gbs_override`` (the
-  closed-form model is optimistic; the override quantifies by how much).
+  into ``core/simulator.simulate`` through the ``PerfModel`` protocol
+  (``AnalyticPerfModel`` carrying the measured overrides; the closed-form
+  model is optimistic and the calibration quantifies by how much).
 
 ``SMOKE_BENCHMARKS`` is the <30 s subset run by ``run.py --suite smoke``.
 """
@@ -97,14 +98,16 @@ def netsim_failure():
 
 
 def netsim_calibration():
-    """Netsim effective-bandwidth override for the analytic simulator."""
+    """Netsim effective-bandwidth calibration for the analytic simulator."""
+    from repro.core.perf_model import AnalyticPerfModel
+
     pod = ub_mesh_pod()
     sim = NetSim(pod, routing=Routing.DETOUR)
     comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
     cal = sim.calibrated_axis_gbs(16e6, comm=comm)
     w, p = moe_2t_workload()
     base = simulate(w, p, comm)
-    calibrated = simulate(w, p, comm, axis_gbs_override=cal)
+    calibrated = simulate(w, p, AnalyticPerfModel(comm, axis_gbs=cal))
     derived = {f"cal_{k}_gbs": round(v, 1) for k, v in cal.items()}
     derived.update(
         {f"model_{k}_gbs": round(a.gbs_per_chip, 1) for k, a in comm.axes.items()}

@@ -2,6 +2,12 @@
 
 Each function returns (derived_dict, reference_dict) — computed numbers next
 to the paper's published values — and run.py times it and emits CSV.
+
+All pricing goes through the ``core.perf_model.PerfModel`` protocol: the
+figure reproductions use the analytic backend (a plain ``CommModel``) to
+stay faithful to the paper's idealized cost model, while
+``benchmarks/planner_bench.py`` compares it against the netsim-calibrated
+backend on the same planner.
 """
 
 from __future__ import annotations
@@ -80,12 +86,13 @@ _FIXED_SPEC = {
 }
 
 
-def _throughput(w, comm, chips=8192, planned=False):
+def _throughput(w, perf, chips=8192, planned=False):
+    """Tokens/s for workload ``w`` under any PerfModel backend ``perf``."""
     if planned or w.name not in _FIXED_SPEC:
-        spec = best_parallel_spec(w, chips, comm)
+        spec = best_parallel_spec(w, chips, perf)
     else:
         spec = _FIXED_SPEC[w.name]
-    return simulator.simulate(w, spec, comm).tokens_per_s
+    return simulator.simulate(w, spec, perf).tokens_per_s
 
 
 def fig17_intra_rack():

@@ -10,7 +10,9 @@ mode — CPU wall time, NOT TPU perf) are included for completeness.
 
 The ``smoke`` suite runs tiny flow-level netsim scenarios (cross-validation
 vs the analytic model, Fig. 19 routing-strategy ordering, link-failure
-recovery) so network-simulator regressions are caught by default.
+recovery) plus the planner-backend comparison (analytic vs
+netsim-calibrated spec rankings, < 10 s) so network-simulator and planner
+regressions are caught by default.
 """
 
 from __future__ import annotations
@@ -37,13 +39,19 @@ def main() -> None:
         failures += 1
         rows.append(f"netsim_bench,0,ERROR={type(e).__name__}:{e}")
         NETSIM_BENCHMARKS, SMOKE_BENCHMARKS = {}, {}
+    try:
+        from benchmarks.planner_bench import PLANNER_BENCHMARKS
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        rows.append(f"planner_bench,0,ERROR={type(e).__name__}:{e}")
+        PLANNER_BENCHMARKS = {}
 
     if args.suite == "smoke":
-        benchmarks = SMOKE_BENCHMARKS
+        benchmarks = {**SMOKE_BENCHMARKS, **PLANNER_BENCHMARKS}
     else:
         from benchmarks.paper_tables import ALL_BENCHMARKS
 
-        benchmarks = {**ALL_BENCHMARKS, **NETSIM_BENCHMARKS}
+        benchmarks = {**ALL_BENCHMARKS, **NETSIM_BENCHMARKS, **PLANNER_BENCHMARKS}
     for name, fn in benchmarks.items():
         t0 = time.perf_counter()
         try:

@@ -7,6 +7,7 @@
 * multiring   — Multi-Ring AllReduce planner (C5)
 * alltoall    — Multi-Path / hierarchical All2All analysis (C5)
 * cost_model  — topology-aware communication cost model (C6)
+* perf_model  — pluggable PerfModel backends: analytic / netsim-calibrated
 * planner     — topology-aware parallelization search (C6)
 * traffic     — per-technique traffic accounting (Table 1)
 * capex       — CapEx/OpEx/cost-efficiency (Fig. 21)
@@ -21,6 +22,7 @@ from . import (  # noqa: F401
     capex,
     cost_model,
     multiring,
+    perf_model,
     planner,
     simulator,
     topology,

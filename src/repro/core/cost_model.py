@@ -38,10 +38,32 @@ class AxisCost:
 
 @dataclass(frozen=True)
 class CommModel:
-    """Cost model over named logical axes."""
+    """Cost model over named logical axes.
+
+    A ``CommModel`` is itself the closed-form (analytic) backend of the
+    ``core.perf_model.PerfModel`` protocol: ``comm_model()`` returns the
+    model unchanged for every candidate spec.  The netsim-calibrated
+    backend lives in ``core/perf_model.py``.
+    """
 
     axes: dict[str, AxisCost]
     routing: Routing = Routing.DETOUR
+
+    # ---- PerfModel protocol ----------------------------------------------
+    @property
+    def backend(self) -> str:
+        return "analytic"
+
+    def comm_model(self, p=None) -> "CommModel":
+        """Resolve to a concrete cost model for spec ``p`` (spec-invariant
+        for the analytic backend)."""
+        return self
+
+    def override_axis(self, name: str, cost: AxisCost) -> "CommModel":
+        """A copy with one axis replaced (added if absent)."""
+        axes = dict(self.axes)
+        axes[name] = cost
+        return CommModel(axes=axes, routing=self.routing)
 
     # ---- primitive collectives (per-chip completion time, seconds) -------
     def allreduce(self, axis: str, size_bytes: float) -> float:

@@ -1,7 +1,9 @@
 """Topology-aware parallelization planner (paper §5.2, Fig. 15).
 
 Step 1 — generate feasible parallelism configurations mapped onto UB-Mesh;
-Step 2 — price each with the topology-aware communication cost model;
+Step 2 — price each through a ``core.perf_model.PerfModel`` backend (the
+closed-form analytic ``CommModel``, or the netsim-calibrated backend that
+prices on flow-level measured bandwidths);
 Step 3 — pick the minimum-cost configuration.
 
 Search-space pruning follows the paper's priority heuristic: TP and SP
@@ -12,11 +14,18 @@ PP and DP get what remains; for MoE, SP*DP must be an integer multiple of EP.
 from __future__ import annotations
 
 import itertools
+import logging
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
+from typing import TYPE_CHECKING, Iterator
 
 from .cost_model import CommModel
 from .traffic import ParallelSpec, WorkloadSpec
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .perf_model import PerfModel
+
+log = logging.getLogger(__name__)
 
 
 def _divisors_pow2(n: int, cap: int) -> list[int]:
@@ -66,6 +75,34 @@ class PlanResult:
     compute_s: float
     comm_s: float
     bubble_s: float
+
+
+@dataclass(frozen=True)
+class PlanReport:
+    """Ranked plan results plus the search's bookkeeping.
+
+    Sequence-like over ``results`` so ``plan(...)[0]`` / iteration keep
+    working; ``skipped`` counts specs whose simulation RAISED (by exception
+    type) — previously swallowed silently, which hid cost-model bugs.
+    """
+
+    results: tuple[PlanResult, ...]
+    n_enumerated: int = 0
+    n_infeasible: int = 0                      # failed memory_feasible
+    skipped: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def n_skipped(self) -> int:
+        return sum(self.skipped.values())
+
+    def __iter__(self) -> Iterator[PlanResult]:
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
 
 
 def enumerate_specs(
@@ -126,21 +163,36 @@ def enumerate_specs(
 def plan(
     w: WorkloadSpec,
     chips: int,
-    comm: CommModel,
+    perf: "PerfModel | CommModel",
     *,
     rack_size: int = 64,
     top_k: int = 5,
-) -> list[PlanResult]:
-    """Rank feasible specs by simulated iteration time (Step 2+3)."""
+) -> PlanReport:
+    """Rank feasible specs by simulated iteration time (Step 2+3).
+
+    ``perf`` is any ``core.perf_model.PerfModel`` backend (a plain
+    ``CommModel`` is the analytic one); a ``NetsimPerfModel`` ranks specs
+    on flow-level *measured* axis bandwidths instead of idealized ones.
+
+    Specs whose simulation raises (missing axis, degenerate bandwidth) are
+    counted per exception type on ``PlanReport.skipped`` and summarized in
+    one log line — not silently dropped, so model bugs stay visible.
+    """
     from .simulator import simulate  # local import to avoid cycle
 
     results: list[PlanResult] = []
+    skipped: dict[str, int] = {}
+    n_enumerated = 0
+    n_infeasible = 0
     for spec in enumerate_specs(w, chips, rack_size=rack_size):
+        n_enumerated += 1
         if not memory_feasible(w, spec):
+            n_infeasible += 1
             continue
         try:
-            r = simulate(w, spec, comm, rack_size=rack_size)
-        except (KeyError, ZeroDivisionError):
+            r = simulate(w, spec, perf, rack_size=rack_size)
+        except (KeyError, ZeroDivisionError) as e:
+            skipped[type(e).__name__] = skipped.get(type(e).__name__, 0) + 1
             continue
         results.append(
             PlanResult(
@@ -151,14 +203,24 @@ def plan(
                 bubble_s=r.bubble_s,
             )
         )
+    if skipped:
+        log.warning(
+            "plan(%s, %d chips): %d/%d specs skipped by simulate errors %s",
+            w.name, chips, sum(skipped.values()), n_enumerated, skipped,
+        )
     results.sort(key=lambda x: x.iteration_s)
-    return results[:top_k]
+    return PlanReport(
+        results=tuple(results[:top_k]),
+        n_enumerated=n_enumerated,
+        n_infeasible=n_infeasible,
+        skipped=skipped,
+    )
 
 
 def best_parallel_spec(
-    w: WorkloadSpec, chips: int, comm: CommModel, *, rack_size: int = 64
+    w: WorkloadSpec, chips: int, perf: "PerfModel | CommModel", *, rack_size: int = 64
 ) -> ParallelSpec:
-    ranked = plan(w, chips, comm, rack_size=rack_size, top_k=1)
+    ranked = plan(w, chips, perf, rack_size=rack_size, top_k=1)
     if not ranked:
         raise ValueError(f"no feasible parallelization for {w.name} on {chips} chips")
     return ranked[0].spec

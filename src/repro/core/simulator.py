@@ -16,9 +16,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
+from typing import TYPE_CHECKING
 
 from .cost_model import AxisCost, CommModel, Routing, build_comm_model, clos_comm_model
 from .traffic import ParallelSpec, TrafficTable, WorkloadSpec, analyze_traffic
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .perf_model import PerfModel
 
 # The simulator models the PAPER's NPU class (its accelerator/bandwidth
 # ratio sets the comm-exposure that Figs 17-22 measure).  The roofline for
@@ -70,25 +74,21 @@ OVERLAP = {"TP": 0.10, "SP": 0.30, "EP": 0.20, "PP": 0.90, "DP": 0.80}
 def simulate(
     w: WorkloadSpec,
     p: ParallelSpec,
-    comm: CommModel,
+    perf: "PerfModel | CommModel",
     *,
     name: str = "",
     rack_size: int = 64,
-    axis_gbs_override: dict[str, float] | None = None,
 ) -> SimResult:
     """Analytic iteration-time simulation.
 
-    ``axis_gbs_override`` replaces the per-chip bandwidth of named axes —
-    the hook for netsim-calibrated *effective* bandwidths
-    (``repro.netsim.NetSim.calibrated_axis_gbs``), which price in the
-    contention and scheduling effects the closed-form model idealizes away.
+    ``perf`` is any ``core.perf_model.PerfModel`` backend: a plain
+    ``CommModel`` (the closed-form analytic backend), an
+    ``AnalyticPerfModel`` with explicit bandwidth overrides, or a
+    ``NetsimPerfModel`` whose ``comm_model(p)`` resolves to flow-level
+    *measured* axis bandwidths for this spec — pricing in the contention
+    and scheduling effects the closed-form model idealizes away.
     """
-    if axis_gbs_override:
-        axes = {
-            k: replace(a, gbs_per_chip=axis_gbs_override.get(k, a.gbs_per_chip))
-            for k, a in comm.axes.items()
-        }
-        comm = CommModel(axes=axes, routing=comm.routing)
+    comm = perf.comm_model(p)
     traffic = analyze_traffic(w, p)
     compute_s = _compute_seconds(w, p)
 
@@ -201,35 +201,41 @@ def linearity_curve(
     base_chips: int,
     scales: list[int],
     *,
-    comm: CommModel | None = None,
+    perf: "PerfModel | CommModel | None" = None,
 ) -> dict[int, float]:
     """Paper Fig. 22: per-NPU throughput at scale k relative to base.
 
     Global batch grows with scale (weak scaling); the planner (priority
-    heuristic inlined here) re-picks DP/PP split at each scale.
+    heuristic inlined here) re-picks DP/PP split at each scale.  ``perf``
+    may be any ``PerfModel`` backend; the DCN penalty above one SuperPod is
+    applied by pinning the "pod" axis through ``override_axis``.
     """
     from .planner import best_parallel_spec  # local import to avoid cycle
 
-    comm = comm or build_comm_model(multi_pod=True, routing=Routing.BORROW)
+    perf = perf or build_comm_model(multi_pod=True, routing=Routing.BORROW)
+    base_axes = perf.comm_model(None).axes
     out: dict[int, float] = {}
     base_w = replace(w, global_batch=max(w.global_batch, base_chips // 8))
-    base_p = best_parallel_spec(base_w, base_chips, comm)
-    base_r = simulate(base_w, base_p, comm)
+    base_p = best_parallel_spec(base_w, base_chips, perf)
+    base_r = simulate(base_w, base_p, perf)
     base_per_npu = base_r.tokens_per_s / base_chips
     for k in scales:
         chips = base_chips * k
         wk = replace(base_w, global_batch=base_w.global_batch * k)
         # beyond one SuperPod (8K), DP crosses the DCN: cheaper per-chip BW
-        comm_k = comm
-        if chips > 8192 and "pod" in comm.axes:
-            axes = dict(comm.axes)
-            dcn_gbs = axes["pod"].gbs_per_chip / 2.5
-            axes["pod"] = AxisCost(
-                size=max(2, chips // 8192), gbs_per_chip=dcn_gbs, latency_s=10e-6
+        perf_k = perf
+        if chips > 8192 and "pod" in base_axes:
+            dcn_gbs = base_axes["pod"].gbs_per_chip / 2.5
+            perf_k = perf.override_axis(
+                "pod",
+                AxisCost(
+                    size=max(2, chips // 8192),
+                    gbs_per_chip=dcn_gbs,
+                    latency_s=10e-6,
+                ),
             )
-            comm_k = CommModel(axes=axes, routing=comm.routing)
-        pk = best_parallel_spec(wk, chips, comm_k)
-        rk = simulate(wk, pk, comm_k)
+        pk = best_parallel_spec(wk, chips, perf_k)
+        rk = simulate(wk, pk, perf_k)
         per_npu = rk.tokens_per_s / chips
         if chips > 8192:
             # cross-SuperPod DCN jitter/straggler amortization (§6.5): the

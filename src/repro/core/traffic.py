@@ -182,6 +182,35 @@ PAPER_TABLE1 = {
 }
 
 
+def backend_comparison_workloads() -> tuple[WorkloadSpec, WorkloadSpec]:
+    """The canonical (uncongested, contended) workload pair for comparing
+    PerfModel backends — shared by ``benchmarks/planner_bench.py`` and the
+    backend-contract tests so the two cannot drift apart.
+
+    * uncongested dense-70B: TP*SP = 64 fills the rack plane exactly, every
+      strong candidate rides the full-bandwidth cross-dim 2D multi-ring, so
+      measured and idealized rankings coincide.
+    * contended MoE-600B @ seq 2500: the sequence length caps SP at 4, so
+      the search is between NARROW model-axis groups (tp*sp = 16..32 chips
+      -> per-dim hierarchical schedule, measured ~85 GB/s) and the full
+      64-chip plane (2D multi-ring, ~140-165 GB/s).  The analytic backend
+      prices them all at a flat 200 GB/s; the netsim backend knows narrow
+      groups are ~2x slower and flips the winner (the Rail-only / RailX
+      observation: placement decisions flip when contention is priced
+      realistically).
+    """
+    clean = WorkloadSpec(
+        "dense-70B", 80, 8192, 64, 128, 8,
+        seq_len=5000, global_batch=512, params_total=7e10,
+    )
+    contended = WorkloadSpec(
+        "moe-600B-s2500", 64, 8192, 64, 128, 8,
+        seq_len=2500, global_batch=512, params_total=6e11,
+        n_experts=16, topk=2, moe_param_frac=0.85,
+    )
+    return clean, contended
+
+
 def moe_2t_workload() -> tuple[WorkloadSpec, ParallelSpec]:
     """An MoE-2T-like setup calibrated to reproduce Table 1's locality."""
     w = WorkloadSpec(

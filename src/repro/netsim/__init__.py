@@ -20,8 +20,8 @@ Module map (paper section -> module):
                     Table-1 traffic entries mapped onto node groups
 * ``api``         — ``NetSim.run(workload, parallel_spec)`` facade,
                     ``NetSimResult``, and the effective-bandwidth
-                    calibration that feeds ``core/simulator.simulate``'s
-                    ``axis_gbs_override`` (§6 evaluation loop)
+                    calibration behind ``core.perf_model.NetsimPerfModel``
+                    (§6 evaluation loop)
 * ``scenarios``   — canonical traffic patterns (cross-rack hotspot,
                     inter-rack mesh) shared by benchmarks and tests
 
@@ -42,6 +42,9 @@ from .collectives import (                                 # noqa: F401
     all_to_all,
     clique_nodes,
     compile_workload,
+    grid_all_gather,
+    grid_allreduce,
+    grid_plane_nodes,
     hierarchical_all_gather,
     hierarchical_allreduce,
     ring_all_gather,

@@ -15,12 +15,14 @@ Shortest < Detour < Borrow in throughput (Fig. 19 ordering).
 
 ``calibrated_axis_gbs`` closes the loop back to the analytic stack: it
 measures the *effective* per-chip collective bandwidth of each logical
-mesh axis from a netsim run, in the exact units
-``core/simulator.simulate`` accepts as its bandwidth override.
+mesh axis from a netsim run, in the exact units ``CommModel`` carries —
+``core.perf_model.NetsimPerfModel`` memoizes these measurements per
+(axis, group-width, routing) key and serves them to the planner.
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 from ..core.cost_model import CommModel, Routing
@@ -30,6 +32,7 @@ from .collectives import (
     FlowDAG,
     clique_nodes,
     compile_workload,
+    grid_allreduce,
     hierarchical_allreduce,
     ring_allreduce,
 )
@@ -227,35 +230,79 @@ class NetSim:
         return result
 
     # -- calibration back into the analytic stack --------------------------
+    def _axis_allreduce_dag(
+        self, dims: tuple[int, ...], size_bytes: float, width: int | None, tag: str
+    ) -> FlowDAG | None:
+        """AllReduce DAG of one logical axis, optionally restricted to a
+        ``width``-chip group (full first-dim cliques widened across the
+        second dim, the ``_model_group`` convention).  Full square planes
+        run the cross-dim 2D multi-ring; narrower groups the hierarchical
+        per-dim schedule; ``width < 2`` means no collective at all."""
+        if width is not None and width < 2:
+            return None
+        x = self.topo.shape[dims[0]]
+        plane = math.prod(self.topo.shape[d] for d in dims)
+        if width is None or width >= plane:
+            if len(dims) == 2:
+                dag = grid_allreduce(self.topo, dims, size_bytes, tag=tag)
+                if dag is not None:
+                    return dag
+            return hierarchical_allreduce(
+                self.topo, dims, size_bytes, tag=tag
+            )
+        if width <= x or len(dims) == 1:
+            nodes = clique_nodes(self.topo, dims[0])[: max(2, width)]
+            return ring_allreduce(self.topo, nodes, size_bytes, tag=tag)
+        boards = -(-width // x)
+        coords = {dims[0]: tuple(range(x)), dims[1]: tuple(range(boards))}
+        return hierarchical_allreduce(
+            self.topo, dims[:2], size_bytes, dim_coords=coords, tag=tag
+        )
+
     def calibrated_axis_gbs(
         self,
         size_bytes: float = 64e6,
         *,
         comm: "CommModel | None" = None,
         axis_sizes: dict[str, int] | None = None,
+        widths: dict[str, int] | None = None,
+        axes: tuple[str, ...] | None = None,
     ) -> dict[str, float]:
         """Effective per-chip collective bandwidth per logical mesh axis,
         measured from netsim runs — in the units ``CommModel``'s
-        ``gbs_per_chip`` uses, so ``core/simulator.simulate`` can take it
-        as ``axis_gbs_override``.
+        ``gbs_per_chip`` uses, so a ``core.perf_model`` backend can feed
+        it back into ``core/simulator.simulate``.
 
         The axis-size normalization must match the CommModel the override
         will be applied to: pass ``comm`` (its ``axes[..].size`` wins) or
         explicit ``axis_sizes``; the fallback is the production mapping's
         16-wide model/data axes.  Axis->dims follows the structural
         convention: dims (0, 1) are the intra-rack "model" domain, the
-        rest the inter-rack "data" domain."""
+        rest the inter-rack "data" domain.  ``widths`` optionally narrows
+        an axis' node group to the chips a parallelism group actually
+        spans (e.g. the TP*SP footprint), which is what makes the
+        calibration spec-dependent for the planner backend.
+
+        Full square planes are measured on the cross-dim 2D multi-ring
+        (Fig. 13), which keeps both dimensions' links busy every step —
+        the hierarchical per-dim schedule only reaches about half of the
+        plane's analytic bandwidth."""
         axis_dims = {"model": (0, 1)}
         if self.topo.ndim > 2:
             axis_dims["data"] = tuple(range(2, self.topo.ndim))
+        if axes is not None:
+            axis_dims = {k: v for k, v in axis_dims.items() if k in axes}
         if axis_sizes is None and comm is not None:
             axis_sizes = {k: a.size for k, a in comm.axes.items()}
         sizes = axis_sizes or {"model": 16, "data": 16}
         out: dict[str, float] = {}
         for axis, dims in axis_dims.items():
-            dag = hierarchical_allreduce(
-                self.topo, dims, size_bytes, tag=f"cal-{axis}"
+            width = (widths or {}).get(axis)
+            dag = self._axis_allreduce_dag(
+                dims, size_bytes, width, tag=f"cal-{axis}"
             )
+            if dag is None:
+                continue
             t = self.run_dag(dag).makespan_s
             if t <= 0:
                 continue

@@ -12,6 +12,11 @@ Compiles the planner-side collective schedules into executable DAGs of
   wrap-around edge — per-link load matches the schedule exactly, including
   the paper's observation that even-n chains lose endpoint bandwidth.
 * **ReduceScatter / AllGather** — the (n-1)-step halves of the same rings.
+* **Cross-dim 2D multi-ring** (Fig. 13's joint (X, Y) schedule) —
+  ``core/multiring.grid_ring_decomposition``'s Hamiltonian cycles over the
+  whole (X, Y) plane, driving both dimensions' links in every step; this is
+  what closes the gap between the measured and analytic "model"-axis
+  bandwidth that the per-dimension hierarchical schedule leaves open.
 * **Hierarchical AllReduce / AllGather** — the cost model's schedule
   (reduce-scatter up the dimension list, allreduce at the top, all-gather
   back down) with phase barriers.
@@ -32,7 +37,7 @@ import itertools
 import math
 from dataclasses import dataclass, field
 
-from ..core.multiring import clique_decomposition
+from ..core.multiring import clique_decomposition, grid_ring_decomposition
 from ..core.topology import NDFullMesh
 from ..core.traffic import ParallelSpec, TrafficTable, WorkloadSpec, analyze_traffic
 
@@ -197,6 +202,87 @@ def ring_reduce_scatter(
 ring_all_gather = ring_reduce_scatter      # same wire schedule, reversed data
 
 
+# ---------------------------------------------------------------------------
+# cross-dim 2D multi-ring (rings spanning the (X, Y) plane jointly)
+# ---------------------------------------------------------------------------
+
+
+def grid_plane_nodes(
+    topo: NDFullMesh, dims: tuple[int, int], *, base_node: int = 0
+) -> list[int]:
+    """Node ids of the 2D plane spanned by ``dims`` through ``base_node``,
+    ordered so index ``i * shape[dims[1]] + j`` is the grid-local id."""
+    base = list(topo.coords(base_node))
+    nodes = []
+    for i in range(topo.shape[dims[0]]):
+        for j in range(topo.shape[dims[1]]):
+            c = list(base)
+            c[dims[0]] = i
+            c[dims[1]] = j
+            nodes.append(topo.node_id(c))
+    return nodes
+
+
+def _grid_collective(
+    topo: NDFullMesh,
+    dims: tuple[int, int],
+    size_bytes: float,
+    n_steps_fn,
+    base_node: int,
+    deps0: tuple[int, ...],
+    dag: FlowDAG | None,
+    tag: str,
+) -> FlowDAG | None:
+    rings = grid_ring_decomposition(topo.shape[dims[0]], topo.shape[dims[1]])
+    if rings is None:
+        return None
+    dag = dag or FlowDAG(name=tag)
+    if size_bytes <= 0:
+        return dag
+    nodes = grid_plane_nodes(topo, dims, base_node=base_node)
+    n = len(nodes)
+    chunk = size_bytes / (len(rings) * n)
+    _ring_steps(dag, nodes, list(rings), True, n_steps_fn(n), chunk, deps0, tag)
+    return dag
+
+
+def grid_allreduce(
+    topo: NDFullMesh,
+    dims: tuple[int, int],
+    size_bytes: float,
+    *,
+    base_node: int = 0,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "grid-ar",
+) -> FlowDAG | None:
+    """Single-phase AllReduce over the WHOLE (dims[0], dims[1]) plane on the
+    cross-dim Hamiltonian rings: 2(n-1) steps over n = x*y nodes, every ring
+    driving one X or Y link per node per step — both dimensions' links stay
+    busy simultaneously, unlike the phase-per-dimension hierarchical
+    schedule.  Returns ``None`` when no grid decomposition exists for this
+    plane (callers fall back to ``hierarchical_allreduce``)."""
+    return _grid_collective(
+        topo, dims, size_bytes, lambda n: 2 * (n - 1), base_node, deps0, dag, tag
+    )
+
+
+def grid_all_gather(
+    topo: NDFullMesh,
+    dims: tuple[int, int],
+    size_bytes: float,
+    *,
+    base_node: int = 0,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "grid-ag",
+) -> FlowDAG | None:
+    """(n-1)-step AllGather half of the cross-dim grid ring schedule."""
+    return _grid_collective(
+        topo, dims, size_bytes, lambda n: n - 1, base_node, deps0, dag, tag
+    )
+
+
 def all_to_all(
     topo: NDFullMesh,
     nodes: list[int],
@@ -356,8 +442,14 @@ def compile_traffic_entry(
         if len(group) <= x:
             fn = ring_allreduce if technique == "TP" else ring_all_gather
             return fn(topo, group, per_transfer_bytes, tag=technique)
-        # partial-width group: full X clique x only the Y boards in use
         boards = -(-len(group) // x)
+        if topo.ndim > 1 and boards == topo.shape[1]:
+            # full (X, Y) plane: cross-dim 2D multi-ring when available
+            grid_fn = grid_allreduce if technique == "TP" else grid_all_gather
+            dag = grid_fn(topo, (0, 1), per_transfer_bytes, tag=technique)
+            if dag is not None:
+                return dag
+        # partial-width group: full X clique x only the Y boards in use
         coords = {0: tuple(range(x)), 1: tuple(range(boards))}
         fn = (
             hierarchical_allreduce if technique == "TP"
@@ -380,6 +472,10 @@ def compile_traffic_entry(
         return dag
     if technique == "DP":
         dims = tuple(range(2, topo.ndim)) if topo.ndim > 2 else (topo.ndim - 1,)
+        if len(dims) == 2:
+            dag = grid_allreduce(topo, dims, per_transfer_bytes, tag="DP")
+            if dag is not None:
+                return dag
         return hierarchical_allreduce(topo, dims, per_transfer_bytes, tag="DP")
     raise ValueError(f"unknown technique {technique}")
 

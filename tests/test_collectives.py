@@ -34,6 +34,51 @@ class TestMultiRing:
         assert np.isclose(wire, 2 * 7 / 8 * 1e9)
 
 
+class TestGridMultiRing:
+    """Cross-dim 2D multi-ring: K_n [] K_n into n-1 Hamiltonian cycles."""
+
+    @pytest.mark.parametrize("n", [2, 3, 4, 5, 6, 7, 8])
+    def test_square_grid_perfect_decomposition(self, n):
+        rings = multiring.grid_ring_decomposition(n, n)
+        assert rings is not None
+        assert len(rings) == (n - 1 if n > 2 else 1)
+        # independent re-verification: Hamiltonian, grid edges only,
+        # pairwise edge-disjoint, and full coverage of BOTH cliques' links
+        seen = set()
+        for r in rings:
+            assert sorted(r) == list(range(n * n))
+            for t in range(len(r)):
+                a, b = r[t], r[(t + 1) % len(r)]
+                ai, aj = divmod(a, n)
+                bi, bj = divmod(b, n)
+                assert (ai == bi) != (aj == bj)
+                e = (min(a, b), max(a, b))
+                assert e not in seen
+                seen.add(e)
+        assert len(seen) == n * n * (n - 1)
+
+    def test_rings_cross_dimensions(self):
+        # unlike the per-dim hierarchical schedule, every ring must use
+        # links of BOTH dimensions (that is the whole point)
+        for r in multiring.grid_ring_decomposition(8, 8):
+            dims_used = set()
+            for t in range(len(r)):
+                a, b = r[t], r[(t + 1) % len(r)]
+                dims_used.add(0 if a % 8 == b % 8 else 1)
+            assert dims_used == {0, 1}
+
+    def test_non_square_returns_none(self):
+        assert multiring.grid_ring_decomposition(8, 2) is None
+        assert multiring.grid_ring_decomposition(4, 8) is None
+
+    def test_grid_bandwidth_beats_sum_of_chains(self):
+        rack = ub_mesh_rack()
+        grid_bw = multiring.grid_effective_bandwidth_gbs(rack, (0, 1))
+        # 7 closed rings x 25 GB/s = 175: above what the per-dim chain
+        # schedule can DELIVER concurrently (one dim's links per phase)
+        assert grid_bw == pytest.approx(7 * 25.0)
+
+
 class TestAllToAll:
     def test_multipath_doubles_pair_bandwidth(self):
         rack = ub_mesh_rack()

@@ -152,6 +152,36 @@ class TestAnalyticAgreement:
         assert r.makespan_s > 0
 
 
+class TestGridMultiRing:
+    def test_grid_allreduce_completes_and_beats_hierarchical(self):
+        from repro.netsim.collectives import grid_allreduce
+
+        topo = ub_mesh_rack()
+        size = 64e6
+        sim = NetSim(topo, routing=Routing.DETOUR)
+        grid = sim.run_dag(grid_allreduce(topo, (0, 1), size))
+        hier = sim.run_dag(hierarchical_allreduce(topo, (0, 1), size))
+        assert grid.incomplete == 0
+        # both dims' links carry traffic in the same run, so the joint
+        # schedule must finish well ahead of the phase-per-dim one
+        assert grid.makespan_s < hier.makespan_s * 0.75
+
+    @pytest.mark.slow
+    def test_calibrated_model_axis_reaches_80pct_of_analytic(self):
+        # the tentpole acceptance number: cross-dim 2D multi-ring lifts the
+        # measured "model"-axis bandwidth from ~87-95 GB/s (hierarchical)
+        # to >= 160 GB/s = 80% of the analytic 200 GB/s (per-chip X+Y
+        # multi-ring allocation) at a bandwidth-dominated payload
+        from repro.core.cost_model import build_comm_model
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        analytic_model_gbs = comm.axes["model"].gbs_per_chip
+        sim = NetSim(ub_mesh_rack(), routing=Routing.DETOUR)
+        cal = sim.calibrated_axis_gbs(512e6, comm=comm)
+        assert cal["model"] >= 160.0
+        assert cal["model"] >= 0.80 * analytic_model_gbs
+
+
 class TestRoutingPolicies:
     def test_fig19_ordering_under_contention(self):
         topo = mesh_2d()
@@ -250,8 +280,9 @@ class TestWorkloadRun:
         assert len(touched) == 16
         assert all(topo.coords(n)[1] < 2 for n in touched)
 
-    def test_calibration_feeds_simulator_override(self):
+    def test_calibration_feeds_simulator_via_perf_model(self):
         from repro.core.cost_model import build_comm_model
+        from repro.core.perf_model import AnalyticPerfModel
         from repro.core.simulator import simulate
         from repro.core.traffic import moe_2t_workload
 
@@ -262,6 +293,6 @@ class TestWorkloadRun:
         w, p = moe_2t_workload()
         comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
         base = simulate(w, p, comm)
-        over = simulate(w, p, comm, axis_gbs_override=cal)
+        over = simulate(w, p, AnalyticPerfModel(comm, axis_gbs=cal))
         # calibrated bandwidth <= idealized analytic => no faster iteration
         assert over.iteration_s >= base.iteration_s * 0.999
