@@ -1,6 +1,6 @@
 """Netsim benchmarks: cross-validation against the analytic engine.
 
-Three claims, each one function (same (derived, ref) contract as
+Four claims, each one function (same (derived, ref) contract as
 ``paper_tables.py``):
 
 * **crossval** — on an uncongested single-dimension clique the flow-level
@@ -13,6 +13,10 @@ Three claims, each one function (same (derived, ref) contract as
   into ``core/simulator.simulate`` through the ``PerfModel`` protocol
   (``AnalyticPerfModel`` carrying the measured overrides; the closed-form
   model is optimistic and the calibration quantifies by how much).
+* **a2a_crossval** — the collective-shape claim behind the
+  ``CalibrationProfile``: A2A-calibrated GB/s < AllReduce-calibrated GB/s
+  on the same axis, and the incast-capped MoE dispatch burst strictly
+  slower than the incast-blind fluid model says.
 
 ``SMOKE_BENCHMARKS`` is the <30 s subset run by ``run.py --suite smoke``.
 """
@@ -25,7 +29,12 @@ from repro.core.simulator import simulate
 from repro.core.topology import ub_mesh_pod, ub_mesh_rack
 from repro.core.traffic import moe_2t_workload
 from repro.netsim import NetSim, hotspot_dag, inter_rack_mesh
-from repro.netsim.collectives import clique_nodes, ring_allreduce
+from repro.netsim.collectives import (
+    clique_nodes,
+    model_group,
+    moe_dispatch,
+    ring_allreduce,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -118,11 +127,45 @@ def netsim_calibration():
     return derived, ref
 
 
+def netsim_a2a_crossval():
+    """Collective-SHAPE crossval: the A2A-calibrated bandwidth must sit
+    strictly below the AllReduce-calibrated one on the model axis (relay
+    hops + the cross-board cut), and a many-to-one MoE dispatch burst must
+    run strictly slower with receiver-egress (incast) caps than the
+    incast-blind fluid model claims."""
+    topo = ub_mesh_rack()
+    comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+    sim = NetSim(topo, routing=Routing.DETOUR)
+    prof = sim.calibrated_profile(
+        16e6, comm=comm, axes=("model",), shapes=("allreduce", "all_to_all")
+    )
+    ar = prof.get("model", "allreduce")
+    a2a = prof.get("model", "all_to_all")
+    # 64 token-holders dispatching to 4 hot expert chips: the incast burst
+    senders = list(range(topo.num_nodes))
+    experts = model_group(topo, 4)
+    dag = moe_dispatch(topo, senders, experts, 16e6)
+    t_incast = NetSim(topo, routing=Routing.DETOUR).run_dag(dag).makespan_s
+    t_fluid = NetSim(topo, routing=Routing.DETOUR, rx_gbs=None).run_dag(dag).makespan_s
+    derived = {
+        "model_allreduce_gbs": round(ar, 1),
+        "model_a2a_gbs": round(a2a, 1),
+        "a2a_below_allreduce": a2a < ar,
+        "dispatch_incast_ms": round(t_incast * 1e3, 4),
+        "dispatch_fluid_ms": round(t_fluid * 1e3, 4),
+        "incast_slowdown": round(t_incast / t_fluid, 3),
+        "incast_strictly_slower": t_incast > t_fluid,
+    }
+    ref = {"note": "a2a < allreduce on the same axis; incast > fluid"}
+    return derived, ref
+
+
 NETSIM_BENCHMARKS = {
     "netsim_crossval": netsim_crossval,
     "netsim_fig19": netsim_fig19,
     "netsim_failure": netsim_failure,
     "netsim_calibration": netsim_calibration,
+    "netsim_a2a_crossval": netsim_a2a_crossval,
 }
 
 # the <30s subset for `run.py --suite smoke`
@@ -130,4 +173,5 @@ SMOKE_BENCHMARKS = {
     "netsim_crossval": netsim_crossval,
     "netsim_fig19": netsim_fig19,
     "netsim_failure": netsim_failure,
+    "netsim_a2a_crossval": netsim_a2a_crossval,
 }

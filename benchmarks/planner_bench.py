@@ -1,17 +1,29 @@
 """Planner-backend comparison: analytic vs netsim-calibrated spec rankings.
 
-One benchmark, two configs (a dense model and an MoE), same contract as
-``paper_tables.py`` — returns (derived, ref) and ``run.py`` times it.  The
-point is the tentpole claim of the PerfModel refactor: the §5.2 planner can
-rank candidate parallelizations on *measured* flow-level bandwidths instead
-of the closed-form idealized ones, and the two backends genuinely disagree
-where contention matters (narrow TP*SP groups cannot ride the cross-dim 2D
-multi-ring, so the netsim backend prices them far below the analytic
-model's flat 200 GB/s model axis).
+One benchmark, three configs, same contract as ``paper_tables.py`` —
+returns (derived, ref) and ``run.py`` times it.  Two claims:
 
-Budget: < 10 s.  The netsim backend memoizes calibration per unique
-(axis, group-width, routing) key, so the second config reuses nearly every
-measurement of the first.
+* **PR 2 (scalar calibration)**: the §5.2 planner can rank candidate
+  parallelizations on *measured* flow-level bandwidths instead of the
+  closed-form idealized ones, and the backends genuinely disagree where
+  contention matters (narrow TP*SP groups cannot ride the cross-dim 2D
+  multi-ring) — the ``clean`` / ``contended`` pair.
+* **PR 3 (collective-shape profile)**: pricing every collective off one
+  AllReduce-calibrated scalar systematically flatters expert parallelism.
+  The ``divergence`` MoE config is ranked by two *netsim* backends that
+  differ only in shape awareness — the AllReduce-proxy one
+  (``shapes=("allreduce",)``) maxes out EP, the full
+  ``CalibrationProfile`` one prices the dispatch A2A on its measured
+  bandwidth (relay hops + incast, ~3x below AllReduce on the cross-board
+  axis) and retreats to clique-local EP — so the winning ``ParallelSpec``
+  flips on A2A pricing alone.
+
+Budget: < 10 s.  Calibration is memoized per unique (axis, shape,
+group-width, routing) key, so the three configs share nearly every
+measurement; the payload is kept small enough that the full-plane grid
+runs (the dominant cost) stay in budget — the bandwidth *ordering*
+(wide grid > narrow hierarchical, ring > cross-board A2A) is
+size-independent, only the latency overhead fraction changes.
 """
 
 from __future__ import annotations
@@ -20,16 +32,20 @@ from repro.core.cost_model import Routing, build_comm_model
 from repro.core.perf_model import AnalyticPerfModel, NetsimPerfModel
 from repro.core.planner import plan
 from repro.core.topology import ub_mesh_pod
-from repro.core.traffic import backend_comparison_workloads
+from repro.core.traffic import (
+    a2a_divergence_workload,
+    backend_comparison_workloads,
+)
 
-# calibration payload small enough to keep the whole comparison in budget;
-# the effective-bandwidth *ordering* (wide grid > narrow hierarchical) is
-# size-independent, only the latency overhead fraction changes
-_CAL_BYTES = 64e6
+_CAL_BYTES = 16e6
 
 # the canonical (uncongested -> agree, contended -> diverge) pair; see the
 # helper's docstring for why the MoE config flips the winner
 _CONFIGS = {w.name: w for w in backend_comparison_workloads()}
+
+
+def _fmt(s) -> str:
+    return f"tp{s.tp}.sp{s.sp}.pp{s.pp}.dp{s.dp}.ep{s.ep}"
 
 
 def planner_backends():
@@ -41,18 +57,29 @@ def planner_backends():
         ra = plan(w, 256, analytic, top_k=3)
         rn = plan(w, 256, netsim, top_k=3)
         sa, sn = ra[0].spec, rn[0].spec
-        derived[f"{name}/analytic"] = (
-            f"tp{sa.tp}.sp{sa.sp}.pp{sa.pp}.dp{sa.dp}.ep{sa.ep}"
-        )
-        derived[f"{name}/netsim"] = (
-            f"tp{sn.tp}.sp{sn.sp}.pp{sn.pp}.dp{sn.dp}.ep{sn.ep}"
-        )
+        derived[f"{name}/analytic"] = _fmt(sa)
+        derived[f"{name}/netsim"] = _fmt(sn)
         derived[f"{name}/agree"] = sa == sn
         derived[f"{name}/iter_s_analytic"] = round(ra[0].iteration_s, 3)
         derived[f"{name}/iter_s_netsim"] = round(rn[0].iteration_s, 3)
         derived[f"{name}/skipped"] = rn.n_skipped
+    # shape-awareness flip: same netsim backend, AllReduce proxy vs profile
+    proxy = NetsimPerfModel(
+        comm, topo=ub_mesh_pod(), size_bytes=_CAL_BYTES, shapes=("allreduce",)
+    )
+    w = a2a_divergence_workload()
+    rp = plan(w, 256, proxy, top_k=3)
+    rn = plan(w, 256, netsim, top_k=3)
+    derived[f"{w.name}/allreduce_proxy"] = _fmt(rp[0].spec)
+    derived[f"{w.name}/a2a_profile"] = _fmt(rn[0].spec)
+    derived[f"{w.name}/flips_on_a2a_pricing"] = rp[0].spec != rn[0].spec
     cm = netsim.comm_model(None)
-    derived["cal_model_gbs_fullplane"] = round(cm.axes["model"].gbs_per_chip, 1)
+    a = cm.axes["model"]
+    derived["cal_model_gbs_fullplane"] = round(a.gbs_per_chip, 1)
+    derived["cal_model_a2a_gbs"] = round(a.bw_for("all_to_all"), 1)
+    derived["a2a_below_allreduce"] = (
+        a.bw_for("all_to_all") < a.bw_for("allreduce")
+    )
     derived["cal_data_gbs"] = round(cm.axes["data"].gbs_per_chip, 1)
     ref = {
         "note": "netsim iter >= analytic iter (measured bw <= idealized)",

@@ -2,22 +2,28 @@
 
     PYTHONPATH=src python -m benchmarks.run                 # full suite
     PYTHONPATH=src python -m benchmarks.run --suite smoke   # <30 s netsim CI
+    PYTHONPATH=src python -m benchmarks.run --suite smoke --json out.json
 
 Prints ``name,us_per_call,derived`` CSV; `derived` is `key=value|...` pairs
 of computed numbers with the paper's reference values interleaved as
-`ref:key=value` for direct comparison.  Kernel micro-benchmarks (interpret
-mode — CPU wall time, NOT TPU perf) are included for completeness.
+`ref:key=value` for direct comparison.  ``--json PATH`` additionally writes
+the structured results (suite, per-benchmark derived/ref dicts, wall time,
+errors) to a file — CI uploads it as a workflow artifact so the perf
+trajectory is inspectable per PR.  Kernel micro-benchmarks (interpret mode
+— CPU wall time, NOT TPU perf) are included for completeness.
 
 The ``smoke`` suite runs tiny flow-level netsim scenarios (cross-validation
 vs the analytic model, Fig. 19 routing-strategy ordering, link-failure
-recovery) plus the planner-backend comparison (analytic vs
-netsim-calibrated spec rankings, < 10 s) so network-simulator and planner
-regressions are caught by default.
+recovery, the A2A-vs-AllReduce calibration crossval) plus the
+planner-backend comparison (analytic vs netsim-calibrated spec rankings
+incl. the AllReduce-proxy vs CalibrationProfile flip, < 10 s) so
+network-simulator and planner regressions are caught by default.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -29,9 +35,16 @@ def _fmt(d: dict) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", choices=("full", "smoke"), default="full")
+    ap.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="also write structured results to PATH (CI artifact)",
+    )
     args = ap.parse_args()
 
     rows = []
+    records: list[dict] = []
     failures = 0
     try:
         from benchmarks.netsim_bench import NETSIM_BENCHMARKS, SMOKE_BENCHMARKS
@@ -61,22 +74,52 @@ def main() -> None:
             if ref:
                 payload += "|" + _fmt({f"ref:{k}": v for k, v in ref.items()})
             rows.append(f"{name},{us:.0f},{payload}")
+            records.append(
+                {"name": name, "us_per_call": round(us), "derived": derived, "ref": ref}
+            )
         except Exception as e:  # noqa: BLE001
             failures += 1
             rows.append(f"{name},0,ERROR={type(e).__name__}:{e}")
+            records.append(
+                {"name": name, "error": f"{type(e).__name__}: {e}"}
+            )
     # kernel micro-benches (interpret mode; full suite only)
     if args.suite == "full":
         try:
             from benchmarks.kernel_bench import kernel_benchmarks
 
-            rows.extend(kernel_benchmarks())
+            kernel_rows = kernel_benchmarks()
+            rows.extend(kernel_rows)
+            for row in kernel_rows:
+                name, us, payload = row.split(",", 2)
+                derived = dict(
+                    kv.split("=", 1) for kv in payload.split("|") if "=" in kv
+                )
+                records.append(
+                    {"name": name, "us_per_call": float(us), "derived": derived}
+                )
         except Exception as e:  # noqa: BLE001
             failures += 1
             rows.append(f"kernel_bench,0,ERROR={type(e).__name__}:{e}")
+            records.append(
+                {"name": "kernel_bench", "error": f"{type(e).__name__}: {e}"}
+            )
 
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(
+                {
+                    "suite": args.suite,
+                    "failures": failures,
+                    "benchmarks": records,
+                },
+                fh,
+                indent=2,
+                default=str,
+            )
     if failures:
         sys.exit(1)
 

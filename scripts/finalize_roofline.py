@@ -1,0 +1,78 @@
+"""Regenerate the roofline summary + append the markdown table.
+
+    python scripts/finalize_roofline.py [--root PATH]
+
+Reads the dry-run cell records under ``<root>/results/dryrun/``, prints the
+ok/skipped/error + bottleneck summary, and rewrites
+``<root>/results/roofline_table.md`` from ``benchmarks.roofline --markdown``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--root",
+        type=pathlib.Path,
+        default=pathlib.Path(__file__).resolve().parent.parent,
+        help="repo root (default: this script's parent repo)",
+    )
+    args = ap.parse_args()
+    root = args.root
+
+    recs = [
+        json.loads(f.read_text())
+        for f in sorted((root / "results" / "dryrun").glob("*.json"))
+    ]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] == "error"]
+    bn: dict[str, int] = {}
+    for r in ok:
+        bn[r["roofline"]["bottleneck"]] = bn.get(r["roofline"]["bottleneck"], 0) + 1
+    print(f"cells: ok={len(ok)} skipped={len(skipped)} error={len(err)}")
+    print("bottlenecks:", bn)
+
+    def frac(r: dict) -> float:
+        rl = r["roofline"]
+        return rl["compute_s"] / max(
+            rl["compute_s"], rl["memory_s"], rl["collective_s"]
+        )
+
+    ok_sorted = sorted(ok, key=frac)
+    print(
+        "worst roofline fraction:",
+        [(r["arch"], r["shape"], r["mesh"], round(frac(r), 3)) for r in ok_sorted[:3]],
+    )
+    print(
+        "best roofline fraction:",
+        [(r["arch"], r["shape"], r["mesh"], round(frac(r), 3)) for r in ok_sorted[-3:]],
+    )
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.roofline", "--markdown"],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=str(root),
+    )
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr)
+        sys.exit(f"benchmarks.roofline failed (exit {out.returncode}); "
+                 "results/roofline_table.md left untouched")
+    (root / "results" / "roofline_table.md").write_text(out.stdout)
+    print("table written to results/roofline_table.md")
+
+
+if __name__ == "__main__":
+    main()

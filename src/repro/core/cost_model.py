@@ -5,6 +5,16 @@ the UB-Mesh topology: each logical mesh axis maps to a set of full-mesh
 dimensions with a concrete per-chip bandwidth (multi-ring effective BW for
 AllReduce-like ops, bottleneck-link BW for All2All), plus per-hop latency.
 
+**Collective-shape awareness** (§2.2 / §5.1): AllReduce-shaped and
+All-to-All-shaped traffic stress an nD-FullMesh very differently — MoE
+dispatch rides relay hops and many-to-one bursts a ring-calibrated scalar
+cannot price.  ``AxisCost`` therefore optionally carries per-shape
+effective bandwidths (``shape_gbs``), and every collective method resolves
+its own shape before falling back to the scalar ``gbs_per_chip``.  A
+``CalibrationProfile`` — effective GB/s keyed by ``(axis, shape)``,
+measured by ``repro.netsim``'s ``NetSim.calibrated_profile`` — stamps
+those per-shape bandwidths onto a ``CommModel``.
+
 The same model is used by
 * the parallelization planner (`core/planner.py`) to rank configs,
 * the training-iteration simulator (`core/simulator.py`) for Figs 17/19/20/22,
@@ -14,8 +24,9 @@ The same model is used by
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from enum import Enum
+from typing import Mapping
 
 from .topology import MeshView, NDFullMesh, production_mesh_view, ub_mesh_pod
 from .multiring import plan_multiring
@@ -27,13 +38,56 @@ class Routing(str, Enum):
     BORROW = "borrow"       # detour + switch-plane bandwidth borrowing
 
 
+# the collective shapes a CalibrationProfile distinguishes; reduce_scatter
+# and all_gather share one wire schedule (the (n-1)-step ring half) so a
+# measurement of one prices both
+COLLECTIVE_SHAPES = (
+    "allreduce",
+    "all_gather",
+    "reduce_scatter",
+    "all_to_all",
+    "p2p",
+)
+
+# upper bound on the node count of an A2A calibration group: a full-plane
+# explicit-relay A2A DAG is ~8k tasks, while the EP footprint convention
+# never exceeds two first-dim cliques.  Shared by the netsim measurement
+# (``NetSim.a2a_group_cap``) and the calibration-cache width
+# canonicalization (``perf_model.NetsimPerfModel._widths``) — one source
+# of truth so cache keys always match the group actually measured.
+A2A_CALIBRATION_MAX_NODES = 16
+
+
 @dataclass(frozen=True)
 class AxisCost:
-    """Communication characteristics of one logical mesh axis."""
+    """Communication characteristics of one logical mesh axis.
+
+    ``shape_gbs`` optionally refines the scalar ``gbs_per_chip`` with
+    per-collective-shape effective bandwidths (shape ∈ COLLECTIVE_SHAPES);
+    ``bw_for(shape)`` resolves shape-first with scalar fallback, so a
+    profile-free AxisCost prices exactly as before.
+    """
 
     size: int
     gbs_per_chip: float       # effective per-chip injection bandwidth
     latency_s: float          # per step
+    shape_gbs: tuple[tuple[str, float], ...] = ()   # ((shape, GB/s), ...)
+
+    def __post_init__(self) -> None:
+        if isinstance(self.shape_gbs, Mapping):   # accept dicts for ergonomics
+            object.__setattr__(
+                self, "shape_gbs", tuple(sorted(self.shape_gbs.items()))
+            )
+
+    def bw_for(self, shape: str) -> float:
+        """Effective GB/s for ``shape``, falling back to the scalar."""
+        for s, gbs in self.shape_gbs:
+            if s == shape:
+                return gbs
+        return self.gbs_per_chip
+
+    def has_shape(self, shape: str) -> bool:
+        return any(s == shape for s, _ in self.shape_gbs)
 
 
 @dataclass(frozen=True)
@@ -72,17 +126,21 @@ class CommModel:
             return 0.0
         wire = 2.0 * (a.size - 1) / a.size * size_bytes
         steps = 2 * (a.size - 1)
-        return wire / (a.gbs_per_chip * 1e9) + steps * a.latency_s
+        return wire / (a.bw_for("allreduce") * 1e9) + steps * a.latency_s
 
     def reduce_scatter(self, axis: str, size_bytes: float) -> float:
         a = self.axes[axis]
         if a.size <= 1 or size_bytes <= 0:
             return 0.0
         wire = (a.size - 1) / a.size * size_bytes
-        return wire / (a.gbs_per_chip * 1e9) + (a.size - 1) * a.latency_s
+        return wire / (a.bw_for("reduce_scatter") * 1e9) + (a.size - 1) * a.latency_s
 
     def all_gather(self, axis: str, size_bytes: float) -> float:
-        return self.reduce_scatter(axis, size_bytes)
+        a = self.axes[axis]
+        if a.size <= 1 or size_bytes <= 0:
+            return 0.0
+        wire = (a.size - 1) / a.size * size_bytes
+        return wire / (a.bw_for("all_gather") * 1e9) + (a.size - 1) * a.latency_s
 
     def all_to_all(self, axis: str, size_bytes: float) -> float:
         """Per-chip A2A of ``size_bytes`` total payload per chip."""
@@ -90,15 +148,25 @@ class CommModel:
         if a.size <= 1 or size_bytes <= 0:
             return 0.0
         wire = (a.size - 1) / a.size * size_bytes
-        # multi-path A2A recovers full clique bandwidth; single path halves it
-        bw = a.gbs_per_chip if self.routing != Routing.SHORTEST else a.gbs_per_chip / 2
+        if a.has_shape("all_to_all"):
+            # a measured A2A bandwidth already embodies the routing policy
+            # (relay hops, multipath splits, incast serialization)
+            bw = a.bw_for("all_to_all")
+        else:
+            # multi-path A2A recovers full clique bandwidth; single path
+            # halves it
+            bw = (
+                a.gbs_per_chip
+                if self.routing != Routing.SHORTEST
+                else a.gbs_per_chip / 2
+            )
         return wire / (bw * 1e9) + a.latency_s * 2
 
     def p2p(self, axis: str, size_bytes: float) -> float:
         a = self.axes[axis]
         if size_bytes <= 0:
             return 0.0
-        return size_bytes / (a.gbs_per_chip * 1e9) + a.latency_s
+        return size_bytes / (a.bw_for("p2p") * 1e9) + a.latency_s
 
     # ---- hierarchical collectives ----------------------------------------
     def hierarchical_allreduce(
@@ -122,6 +190,53 @@ class CommModel:
             frac *= self.axes[ax].size
             t += self.all_gather(ax, frac)
         return t
+
+
+@dataclass(frozen=True)
+class CalibrationProfile:
+    """Measured effective bandwidths keyed by ``(axis, collective shape)``.
+
+    Produced by executing each shape's flow DAG on the flow-level simulator
+    (``NetSim.calibrated_profile``), in the per-chip GB/s units ``CommModel``
+    carries: plugging ``gbs[(axis, shape)]`` into the matching closed-form
+    collective formula reproduces the measured completion time.  Because
+    A2A rides relay hops and incast-capped receivers while AllReduce rides
+    edge-disjoint rings, ``gbs[(ax, "all_to_all")] < gbs[(ax, "allreduce")]``
+    on any multi-dimension axis — the whole point of shape-aware pricing.
+    """
+
+    gbs: dict[tuple[str, str], float] = field(default_factory=dict)
+
+    def get(self, axis: str, shape: str, default: float | None = None):
+        return self.gbs.get((axis, shape), default)
+
+    def axis_shapes(self, axis: str) -> dict[str, float]:
+        """shape -> GB/s of every measurement for ``axis``."""
+        return {s: g for (a, s), g in sorted(self.gbs.items()) if a == axis}
+
+    def merged(self, other: "CalibrationProfile") -> "CalibrationProfile":
+        return CalibrationProfile(gbs={**self.gbs, **other.gbs})
+
+    def apply(self, comm: CommModel, *, clamp: bool = True) -> CommModel:
+        """Stamp the profile onto ``comm``: each measured axis gains
+        per-shape bandwidths, and its scalar ``gbs_per_chip`` drops to the
+        AllReduce measurement (so shape-unaware consumers see the same
+        number the scalar calibration used to produce).  ``clamp`` keeps
+        every measured bandwidth at or below the analytic value — a flow-
+        level measurement can only tighten the closed-form bound."""
+        axes = {}
+        for name, a in comm.axes.items():
+            shapes = self.axis_shapes(name)
+            if not shapes:
+                axes[name] = a
+                continue
+            if clamp:
+                shapes = {s: min(g, a.gbs_per_chip) for s, g in shapes.items()}
+            scalar = shapes.get("allreduce", a.gbs_per_chip)
+            axes[name] = replace(
+                a, gbs_per_chip=scalar, shape_gbs=tuple(sorted(shapes.items()))
+            )
+        return CommModel(axes=axes, routing=comm.routing)
 
 
 def build_comm_model(

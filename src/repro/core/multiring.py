@@ -372,16 +372,28 @@ def _verify_grid_rings(rings: list[Ring], n: int) -> None:
     )
 
 
-@lru_cache(maxsize=32)
-def grid_ring_decomposition(x: int, y: int) -> tuple[Ring, ...] | None:
-    """Edge-disjoint Hamiltonian cycles of the 2D Hamming graph K_x [] K_y.
+class UnsupportedGridError(ValueError):
+    """No cross-dim Hamiltonian ring decomposition exists for this plane.
 
-    Returns ``n-1`` cycles over local node ids ``i * y + j`` (a perfect
-    decomposition: every X and Y link of the grid carries exactly one ring),
-    or ``None`` when no construction is available (non-square grids, or an
-    even size outside the search's reach) — callers fall back to the
-    per-dimension hierarchical schedule.
+    Structured signal (rather than a silent ``None``) so callers must
+    explicitly acknowledge — and can log — the fall-back to the
+    per-dimension hierarchical schedule, which only drives one dimension's
+    links per phase (~half the plane's bandwidth).
     """
+
+    def __init__(self, x: int, y: int, reason: str):
+        self.x = x
+        self.y = y
+        self.reason = reason
+        super().__init__(
+            f"no grid ring decomposition for K_{x} □ K_{y}: {reason}"
+        )
+
+
+@lru_cache(maxsize=32)
+def _grid_ring_decomposition_cached(x: int, y: int) -> tuple[Ring, ...] | None:
+    """Cached construction; ``None`` marks an impossible/failed plane so a
+    miss (including an exhausted runtime search) is only paid once."""
     if x != y or x < 2:
         return None
     n = x
@@ -414,6 +426,29 @@ def grid_ring_decomposition(x: int, y: int) -> tuple[Ring, ...] | None:
     return tuple(rings)
 
 
+def grid_ring_decomposition(x: int, y: int) -> tuple[Ring, ...]:
+    """Edge-disjoint Hamiltonian cycles of the 2D Hamming graph K_x [] K_y.
+
+    Returns ``n-1`` cycles over local node ids ``i * y + j`` (a perfect
+    decomposition: every X and Y link of the grid carries exactly one
+    ring).  Raises :class:`UnsupportedGridError` when no construction is
+    available — non-square (K_x != K_y) planes, or an even size the
+    rainbow-cycle search cannot reach — so callers explicitly fall back to
+    (and log) the per-dimension hierarchical schedule instead of silently
+    degrading.
+    """
+    rings = _grid_ring_decomposition_cached(x, y)
+    if rings is None:
+        if x != y:
+            reason = "non-square planes have no known decomposition"
+        elif x < 2:
+            reason = "plane is degenerate (fewer than 2x2 nodes)"
+        else:
+            reason = "rainbow-cycle search exhausted for this even size"
+        raise UnsupportedGridError(x, y, reason)
+    return rings
+
+
 def grid_effective_bandwidth_gbs(topo: NDFullMesh, dims: tuple[int, int]) -> float | None:
     """Per-chip AllReduce bandwidth of the cross-dim 2D multi-ring over the
     plane spanned by ``dims``: each of the R rings injects on one distinct
@@ -421,7 +456,11 @@ def grid_effective_bandwidth_gbs(topo: NDFullMesh, dims: tuple[int, int]) -> flo
     (rings alternate between both dims' links, the slower bounds the step).
     ``None`` when no grid decomposition exists for this plane."""
     d0, d1 = (topo.dims[d] for d in dims)
-    rings = grid_ring_decomposition(topo.shape[dims[0]], topo.shape[dims[1]])
-    if rings is None:
+    try:
+        rings = grid_ring_decomposition(
+            topo.shape[dims[0]], topo.shape[dims[1]]
+        )
+    except UnsupportedGridError as e:
+        log.info("grid bandwidth unavailable for dims %s (%s)", dims, e.reason)
         return None
     return len(rings) * min(d0.gbs_per_peer, d1.gbs_per_peer)

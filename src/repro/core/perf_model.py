@@ -9,23 +9,32 @@ Two backends implement it:
 
 * **analytic** — ``CommModel`` itself (closed-form alpha-beta costs with
   idealized multi-ring bandwidths; spec-invariant).  ``AnalyticPerfModel``
-  is the same backend with explicit per-axis bandwidth overrides, the
+  is the same backend with explicit per-axis bandwidth overrides — the
   typed replacement for the old ``simulate(axis_gbs_override=...)``
-  plumbing.
-* **netsim-calibrated** — ``NetsimPerfModel`` measures each axis' effective
-  collective bandwidth by *executing* the collective's flow DAG on the
-  flow-level simulator (``repro.netsim``), so contention, chain-endpoint
-  idling and schedule structure are priced instead of assumed.  Ranking
-  hundreds of candidate specs stays tractable because calibration is
-  memoized per unique ``(topology, axis, group-width, routing, payload)``
-  key — NOT per spec: a 1024-chip search hits only a handful of distinct
-  TP*SP footprints.
+  plumbing — and can additionally carry a ``CalibrationProfile`` of
+  measured per-(axis, collective-shape) bandwidths.
+* **netsim-calibrated** — ``NetsimPerfModel`` measures each axis'
+  effective bandwidth **per collective shape** by *executing* the matching
+  flow DAG on the flow-level simulator (``repro.netsim``): AllReduce /
+  AllGather ride the multi-ring schedules, All-to-All rides the Fig. 14
+  X-then-Y / Y-then-X split with explicit relay hops and receiver-egress
+  (incast) caps, P2P a routed transfer.  Contention, chain-endpoint
+  idling, relay serialization and incast are priced instead of assumed.
+  Ranking hundreds of candidate specs stays tractable because calibration
+  is memoized per unique ``(topology, axis, shape, group-width, routing,
+  payload)`` key — NOT per spec: a 1024-chip search hits only a handful
+  of distinct TP*SP / EP footprints.
 
-The spec-dependence that matters for planning is the **model-axis group
-width**: a TP*SP group that spans the whole (X, Y) rack plane rides the
-cross-dim 2D multi-ring (~85% of the analytic bandwidth), while a partial
-plane is stuck with the per-dimension hierarchical schedule (~50%) — so
-realistic pricing can flip the planner's winner on contended workloads.
+Two spec-dependences matter for planning:
+
+* the **model-axis group width**: a TP*SP group spanning the whole (X, Y)
+  rack plane rides the cross-dim 2D multi-ring (~85% of the analytic
+  bandwidth), while a partial plane is stuck with the per-dimension
+  hierarchical schedule (~50%);
+* the **collective shape**: the MoE dispatch A2A prices ~3x below the
+  AllReduce number on the same axis (relay hops + incast), so an
+  AllReduce-proxy backend systematically flatters expert parallelism —
+  restrict ``shapes=("allreduce",)`` to reproduce that proxy behavior.
 """
 
 from __future__ import annotations
@@ -33,7 +42,13 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Protocol, runtime_checkable
 
-from .cost_model import AxisCost, CommModel
+from .cost_model import (
+    A2A_CALIBRATION_MAX_NODES,
+    COLLECTIVE_SHAPES,
+    AxisCost,
+    CalibrationProfile,
+    CommModel,
+)
 from .topology import NDFullMesh, ub_mesh_pod
 from .traffic import ParallelSpec
 
@@ -56,28 +71,38 @@ class AnalyticPerfModel:
 
     ``axis_gbs`` replaces the per-chip bandwidth of named axes — e.g. a
     one-off calibration from ``NetSim.calibrated_axis_gbs`` — without the
-    untyped dict plumbing ``simulate`` used to carry.
+    untyped dict plumbing ``simulate`` used to carry.  ``profile``
+    optionally stamps measured per-(axis, collective-shape) bandwidths
+    (a ``NetSim.calibrated_profile`` result) on top, so a one-off
+    measurement can drive shape-aware pricing without the netsim backend's
+    per-spec recalibration.
     """
 
     base: CommModel
     axis_gbs: dict[str, float] = field(default_factory=dict)
+    profile: CalibrationProfile | None = None
 
     @property
     def backend(self) -> str:
         return "analytic"
 
     def comm_model(self, p: ParallelSpec | None = None) -> CommModel:
-        if not self.axis_gbs:
-            return self.base
-        axes = {
-            k: replace(a, gbs_per_chip=self.axis_gbs.get(k, a.gbs_per_chip))
-            for k, a in self.base.axes.items()
-        }
-        return CommModel(axes=axes, routing=self.base.routing)
+        comm = self.base
+        if self.axis_gbs:
+            axes = {
+                k: replace(a, gbs_per_chip=self.axis_gbs.get(k, a.gbs_per_chip))
+                for k, a in comm.axes.items()
+            }
+            comm = CommModel(axes=axes, routing=comm.routing)
+        if self.profile is not None:
+            comm = self.profile.apply(comm)
+        return comm
 
     def override_axis(self, name: str, cost: AxisCost) -> "AnalyticPerfModel":
         gbs = {k: v for k, v in self.axis_gbs.items() if k != name}
-        return AnalyticPerfModel(self.base.override_axis(name, cost), gbs)
+        return AnalyticPerfModel(
+            self.base.override_axis(name, cost), gbs, self.profile
+        )
 
 
 def _topo_key(topo: NDFullMesh) -> tuple:
@@ -87,23 +112,35 @@ def _topo_key(topo: NDFullMesh) -> tuple:
 
 
 # calibration memo shared across backend instances: one netsim execution per
-# unique (topology, axis, group-width, routing, payload, latency) — the same
-# key appears once whether the planner scores 10 specs or 1000
+# unique (topology, axis, shape, group-width, routing, payload, latency, rx)
+# — the same key appears once whether the planner scores 10 specs or 1000
 _CALIBRATION_CACHE: dict[tuple, float] = {}
 
 
 @dataclass(frozen=True)
 class NetsimPerfModel:
     """Netsim-calibrated backend: effective axis bandwidths measured by
-    executing each axis' collective flow DAG on the concrete topology.
+    executing each (axis, collective shape)'s flow DAG on the concrete
+    topology, assembled into a ``CalibrationProfile`` per spec.
 
-    ``comm_model(p)`` narrows the model-axis calibration to the TP*SP
-    footprint of ``p`` (capped at the topology's own (X, Y) rack plane, so
-    the cap always matches the fabric being simulated), which makes wide
-    groups that can ride the cross-dim 2D multi-ring price differently
-    from narrow ones; the data axis is calibrated once over the full
-    inter-rack plane.  Axes the netsim topology cannot measure (e.g. the
-    HRS "pod" tier) keep their analytic cost.
+    ``comm_model(p)`` narrows the model-axis ring-collective calibration
+    to the TP*SP footprint of ``p`` (capped at the topology's own (X, Y)
+    rack plane, so the cap always matches the fabric being simulated) and
+    the model-axis A2A calibration to the EP footprint (the
+    ``compile_traffic_entry`` convention: up to two first-dim cliques) —
+    so wide groups that can ride the cross-dim 2D multi-ring price
+    differently from narrow ones, and EP volume is priced on the measured
+    A2A number while TP/DP keep theirs.  The data axis is calibrated once
+    over the full inter-rack plane.  Axes the netsim topology cannot
+    measure (e.g. the HRS "pod" tier) keep their analytic cost.
+
+    ``shapes`` selects what gets measured: the default is the full
+    ``COLLECTIVE_SHAPES`` profile; ``("allreduce",)`` reproduces the
+    PR-2-era AllReduce-proxy backend, where every collective is priced on
+    the ring-calibrated scalar (useful as the baseline that shows why
+    shape-aware pricing changes planner decisions).  ``rx_gbs`` is the
+    receiver-egress (incast) cap handed to netsim ("auto" = the node's
+    largest per-dim clique allocation).
     """
 
     base: CommModel
@@ -111,13 +148,20 @@ class NetsimPerfModel:
     size_bytes: float = 256e6
     latency_s: float = 1e-6
     pinned: dict[str, AxisCost] = field(default_factory=dict)
+    shapes: tuple[str, ...] = COLLECTIVE_SHAPES
+    rx_gbs: float | str | None = "auto"
 
     @property
     def backend(self) -> str:
         return "netsim"
 
     # -- calibration (memoized) -------------------------------------------
-    def _calibrate(self, widths: dict[str, int | None]) -> dict[str, float]:
+    def _calibrate(
+        self, widths: dict[tuple[str, str], int | None]
+    ) -> dict[tuple[str, str], float]:
+        """(axis, shape) -> measured GB/s for the requested group widths,
+        via the shared cross-instance cache; ``reduce_scatter`` aliases
+        the ``all_gather`` measurement (same wire schedule)."""
         from ..netsim import NetSim  # deferred: core must not hard-require netsim
 
         key_base = (
@@ -125,61 +169,93 @@ class NetsimPerfModel:
             self.base.routing.value,
             self.size_bytes,
             self.latency_s,
+            self.rx_gbs,
         )
+
+        def key(axis: str, shape: str, w: int | None) -> tuple:
+            if shape == "reduce_scatter":
+                shape = "all_gather"
+            return key_base + (axis, shape, w)
+
         missing = {
-            axis: w
-            for axis, w in widths.items()
-            if key_base + (axis, w) not in _CALIBRATION_CACHE
+            (axis, shape): w
+            for (axis, shape), w in widths.items()
+            if key(axis, shape, w) not in _CALIBRATION_CACHE
         }
         if missing:
             sim = NetSim(
                 self.topo,
                 routing=self.base.routing,
                 latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
             )
-            cal = sim.calibrated_axis_gbs(
-                self.size_bytes,
-                comm=self.base,
-                widths={a: w for a, w in missing.items() if w is not None},
-                axes=tuple(missing),
-            )
-            for axis, w in missing.items():
-                # axes netsim could not measure fall back to the analytic bw
-                _CALIBRATION_CACHE[key_base + (axis, w)] = cal.get(
-                    axis, self.base.axes[axis].gbs_per_chip
+            for (axis, shape), w in missing.items():
+                mshape = "all_gather" if shape == "reduce_scatter" else shape
+                cal = sim.calibrated_profile(
+                    self.size_bytes,
+                    comm=self.base,
+                    widths={} if w is None else {axis: w},
+                    axes=(axis,),
+                    shapes=(mshape,),
+                )
+                # shapes netsim could not measure fall back to the analytic bw
+                _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
+                    axis, mshape, self.base.axes[axis].gbs_per_chip
                 )
         return {
-            axis: _CALIBRATION_CACHE[key_base + (axis, w)]
-            for axis, w in widths.items()
+            (axis, shape): _CALIBRATION_CACHE[key(axis, shape, w)]
+            for (axis, shape), w in widths.items()
         }
 
-    def _widths(self, p: ParallelSpec | None) -> dict[str, int | None]:
-        """Calibration group width per measurable axis for spec ``p``.
-        ``None`` means the full plane; widths that cover the plane are
-        canonicalized to ``None`` so they share one cache entry."""
-        widths: dict[str, int | None] = {}
+    def _widths(
+        self, p: ParallelSpec | None
+    ) -> dict[tuple[str, str], int | None]:
+        """Calibration group width per measurable (axis, shape) for spec
+        ``p``.  ``None`` means the shape's default group (full plane for
+        ring collectives, the capped A2A footprint for all_to_all); widths
+        that cover it are canonicalized to ``None`` so they share one
+        cache entry."""
+        widths: dict[tuple[str, str], int | None] = {}
+        x = self.topo.shape[0]
+        plane = x * (self.topo.shape[1] if self.topo.ndim > 1 else 1)
         if "model" in self.base.axes:
-            plane = self.topo.shape[0] * (
-                self.topo.shape[1] if self.topo.ndim > 1 else 1
-            )
-            w = None if p is None else p.tp * p.sp
-            widths["model"] = None if w is None or w >= plane else w
+            for shape in self.shapes:
+                if shape in ("allreduce", "all_gather", "reduce_scatter"):
+                    w = None if p is None else p.tp * p.sp
+                    widths[("model", shape)] = (
+                        None if w is None or w >= plane else w
+                    )
+                elif shape == "all_to_all":
+                    # EP footprint (compile_traffic_entry convention),
+                    # canonicalized against the SAME cap the measurement
+                    # group uses; an ep=1 spec has no A2A traffic to price
+                    if p is not None and p.ep <= 1:
+                        continue
+                    cap = min(A2A_CALIBRATION_MAX_NODES, 2 * x, plane)
+                    w = None if p is None else min(2 * p.ep, cap)
+                    widths[("model", shape)] = (
+                        None if w is None or w >= cap else w
+                    )
+                else:                           # p2p: width-independent
+                    widths[("model", shape)] = None
         if "data" in self.base.axes and self.topo.ndim > 2:
-            widths["data"] = None               # full inter-rack plane
+            for shape in self.shapes:
+                widths[("data", shape)] = None  # full inter-rack plane
         return widths
 
+    def calibration_profile(
+        self, p: ParallelSpec | None = None
+    ) -> CalibrationProfile:
+        """The measured (axis, shape) profile resolved for spec ``p``
+        (memoized; unclamped — ``comm_model`` clamps at the analytic
+        bound when pricing)."""
+        return CalibrationProfile(gbs=dict(self._calibrate(self._widths(p))))
+
     def comm_model(self, p: ParallelSpec | None = None) -> CommModel:
-        cal = self._calibrate(self._widths(p))
-        axes = {}
-        for name, a in self.base.axes.items():
-            if name in cal:
-                # measured effective bw can only tighten the analytic bound
-                a = replace(a, gbs_per_chip=min(a.gbs_per_chip, cal[name]))
-            if name in self.pinned:
-                a = self.pinned[name]
-            axes[name] = a
+        comm = self.calibration_profile(p).apply(self.base, clamp=True)
+        axes = dict(comm.axes)
         for name, a in self.pinned.items():
-            axes.setdefault(name, a)
+            axes[name] = a
         return CommModel(axes=axes, routing=self.base.routing)
 
     def override_axis(self, name: str, cost: AxisCost) -> "NetsimPerfModel":

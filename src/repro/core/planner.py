@@ -2,8 +2,10 @@
 
 Step 1 — generate feasible parallelism configurations mapped onto UB-Mesh;
 Step 2 — price each through a ``core.perf_model.PerfModel`` backend (the
-closed-form analytic ``CommModel``, or the netsim-calibrated backend that
-prices on flow-level measured bandwidths);
+closed-form analytic ``CommModel``, or the netsim-calibrated backend whose
+``CalibrationProfile`` prices each collective SHAPE on its own measured
+bandwidth — so EP's all-to-all is no longer flattered by an
+AllReduce-calibrated scalar);
 Step 3 — pick the minimum-cost configuration.
 
 Search-space pruning follows the paper's priority heuristic: TP and SP

@@ -71,6 +71,26 @@ def _compute_seconds(w: WorkloadSpec, p: ParallelSpec) -> float:
 OVERLAP = {"TP": 0.10, "SP": 0.30, "EP": 0.20, "PP": 0.90, "DP": 0.80}
 
 
+def _collective_time(
+    comm: CommModel, axis: str, shape: str, size_bytes: float
+) -> float:
+    """Price one transfer of ``shape`` on ``axis`` — the dispatch point
+    where a traffic entry's collective shape (``TrafficEntry.shape``)
+    selects the matching shape-resolved ``CommModel`` cost, so an A2A
+    entry rides the A2A-calibrated bandwidth, not the AllReduce proxy."""
+    if shape == "allreduce":
+        return comm.allreduce(axis, size_bytes)
+    if shape == "all_gather":
+        return comm.all_gather(axis, size_bytes)
+    if shape == "reduce_scatter":
+        return comm.reduce_scatter(axis, size_bytes)
+    if shape == "all_to_all":
+        return comm.all_to_all(axis, size_bytes)
+    if shape == "p2p":
+        return comm.p2p(axis, size_bytes)
+    raise KeyError(f"unknown collective shape {shape!r}")
+
+
 def simulate(
     w: WorkloadSpec,
     p: ParallelSpec,
@@ -83,10 +103,14 @@ def simulate(
 
     ``perf`` is any ``core.perf_model.PerfModel`` backend: a plain
     ``CommModel`` (the closed-form analytic backend), an
-    ``AnalyticPerfModel`` with explicit bandwidth overrides, or a
+    ``AnalyticPerfModel`` with explicit bandwidth overrides (and
+    optionally a measured ``CalibrationProfile``), or a
     ``NetsimPerfModel`` whose ``comm_model(p)`` resolves to flow-level
-    *measured* axis bandwidths for this spec — pricing in the contention
-    and scheduling effects the closed-form model idealizes away.
+    *measured* per-(axis, collective-shape) bandwidths for this spec —
+    pricing in the contention, relay and incast effects the closed-form
+    model idealizes away.  Each traffic entry is priced on its own
+    collective shape (``TrafficEntry.shape``): EP's A2A rides the
+    A2A-calibrated number while TP/DP keep theirs.
     """
     comm = perf.comm_model(p)
     traffic = analyze_traffic(w, p)
@@ -106,27 +130,20 @@ def simulate(
         n = e.n_transfers
         if e.technique in ("TP", "SP", "EP"):
             n = max(1, n // p.pp)   # each device hosts L/pp of the layers
-        if e.technique == "TP":
-            t_local = comm.allreduce("model", per_transfer) * n
-            t_spill = comm.allreduce("data", per_transfer) * n
-        elif e.technique == "SP":
-            t_local = comm.all_gather("model", per_transfer) * n
-            t_spill = comm.all_gather("data", per_transfer) * n
-        elif e.technique == "EP":
+        if e.technique == "EP":
             # Table-1 ledger stores the per-peer chunk; the device-level A2A
             # payload per op is chunk * ep
-            payload = per_transfer * p.ep
-            t_local = comm.all_to_all("model", payload) * n
-            t_spill = comm.all_to_all("data", payload) * n
-        elif e.technique == "PP":
-            t_local = comm.p2p("data", per_transfer) * n
+            per_transfer = per_transfer * p.ep
+        if e.technique == "PP":
+            t_local = _collective_time(comm, "data", e.shape, per_transfer) * n
             t_spill = t_local
         elif e.technique == "DP":
             axes = ["data"] + (["pod"] if "pod" in comm.axes else [])
             t_local = comm.hierarchical_allreduce(axes, per_transfer) * n
             t_spill = t_local
-        else:  # pragma: no cover
-            continue
+        else:   # TP / SP / EP live on the model axis, spilling to "data"
+            t_local = _collective_time(comm, "model", e.shape, per_transfer) * n
+            t_spill = _collective_time(comm, "data", e.shape, per_transfer) * n
         t = (1 - spill) * t_local + spill * t_spill
         exposed = t * (1 - OVERLAP[e.technique])
         comm_s[e.technique] = comm_s.get(e.technique, 0.0) + exposed

@@ -57,6 +57,18 @@ class ParallelSpec:
         return self.tp * self.pp * self.dp
 
 
+# ledger pattern label -> the canonical collective shape a
+# ``core.cost_model.CalibrationProfile`` prices (COLLECTIVE_SHAPES)
+_PATTERN_SHAPE = {
+    "AllReduce": "allreduce",
+    "AllGather": "all_gather",
+    "AllGather(full)": "all_gather",
+    "ReduceScatter": "reduce_scatter",
+    "AlltoAll": "all_to_all",
+    "P2P": "p2p",
+}
+
+
 @dataclass(frozen=True)
 class TrafficEntry:
     technique: str
@@ -65,6 +77,13 @@ class TrafficEntry:
     n_transfers: int
     total_bytes: float
     locality: str                # which mesh axis carries it
+
+    @property
+    def shape(self) -> str:
+        """Collective shape of this entry, in ``CalibrationProfile`` terms
+        — the single source of truth the simulator dispatches on, so EP
+        volume is priced on the A2A bandwidth while TP/DP keep theirs."""
+        return _PATTERN_SHAPE[self.pattern]
 
     @property
     def volume_mb(self) -> float:
@@ -209,6 +228,29 @@ def backend_comparison_workloads() -> tuple[WorkloadSpec, WorkloadSpec]:
         n_experts=16, topk=2, moe_param_frac=0.85,
     )
     return clean, contended
+
+
+def a2a_divergence_workload() -> WorkloadSpec:
+    """The canonical MoE config whose winning spec flips between
+    AllReduce-proxy pricing and the A2A-aware ``CalibrationProfile`` —
+    shared by ``benchmarks/planner_bench.py`` and the backend-contract
+    tests.
+
+    seq 2500 caps SP at 4, so TP*SP cannot soak up chips and EP carries a
+    large dispatch volume (topk=8 of 16 experts, wide hidden, small dense
+    params keep compute from masking it).  Priced on the AllReduce proxy
+    the A2A is nearly free and the planner maxes out expert parallelism
+    (ep=16, dp=128); priced on the measured A2A bandwidth (~3x lower:
+    relay hops + incast) the same search retreats to ep=4 and buys
+    pipeline stages instead — the Rail-only / "99 Problems" observation
+    that topology-cost conclusions flip when A2A-shaped traffic is priced
+    with its real contention pattern.
+    """
+    return WorkloadSpec(
+        "moe-a2a-div", 32, 12288, 96, 128, 8,
+        seq_len=2500, global_batch=512, params_total=8e10,
+        n_experts=16, topk=8, moe_param_frac=0.9,
+    )
 
 
 def moe_2t_workload() -> tuple[WorkloadSpec, ParallelSpec]:

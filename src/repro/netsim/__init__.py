@@ -11,7 +11,9 @@ Module map (paper section -> module):
 * ``events``      — deterministic heapq event engine, virtual time
                     (simulation substrate; no paper section)
 * ``flows``       — max-min fair-share fluid flows on the §3.1 nD-FullMesh
-                    links, per-dim ``gbs_per_peer`` capacities (Table 3)
+                    links, per-dim ``gbs_per_peer`` capacities (Table 3),
+                    plus receiver-egress (incast) caps that serialize
+                    many-to-one bursts instead of resolving them instantly
 * ``routing``     — APR adapter (§4.1): shortest / detour / borrow path
                     sets from ``core/apr.py`` as per-flow multi-path
                     splits; direct-notification fast recovery (§4.2)
@@ -19,9 +21,9 @@ Module map (paper section -> module):
                     All2All (Fig. 14) schedules compiled into flow DAGs;
                     Table-1 traffic entries mapped onto node groups
 * ``api``         — ``NetSim.run(workload, parallel_spec)`` facade,
-                    ``NetSimResult``, and the effective-bandwidth
-                    calibration behind ``core.perf_model.NetsimPerfModel``
-                    (§6 evaluation loop)
+                    ``NetSimResult``, and the per-(axis, collective-shape)
+                    ``calibrated_profile`` behind
+                    ``core.perf_model.NetsimPerfModel`` (§6 evaluation loop)
 * ``scenarios``   — canonical traffic patterns (cross-rack hotspot,
                     inter-rack mesh) shared by benchmarks and tests
 
@@ -47,11 +49,14 @@ from .collectives import (                                 # noqa: F401
     grid_plane_nodes,
     hierarchical_all_gather,
     hierarchical_allreduce,
+    model_group,
+    moe_dispatch,
+    multipath_all_to_all,
     ring_all_gather,
     ring_allreduce,
     ring_reduce_scatter,
 )
 from .events import EventEngine                            # noqa: F401
-from .flows import FluidNetwork                            # noqa: F401
+from .flows import FluidNetwork, default_rx_gbs            # noqa: F401
 from .routing import Router, Transfer                      # noqa: F401
 from .scenarios import hotspot_dag, inter_rack_mesh        # noqa: F401

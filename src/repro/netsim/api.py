@@ -25,19 +25,31 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
-from ..core.cost_model import CommModel, Routing
+from ..core.cost_model import (
+    A2A_CALIBRATION_MAX_NODES,
+    COLLECTIVE_SHAPES,
+    CalibrationProfile,
+    CommModel,
+    Routing,
+)
 from ..core.topology import NDFullMesh, ub_mesh_pod
 from ..core.traffic import ParallelSpec, WorkloadSpec
 from .collectives import (
     FlowDAG,
+    model_group,
     clique_nodes,
     compile_workload,
+    grid_all_gather,
     grid_allreduce,
+    grid_plane_nodes,
+    hierarchical_all_gather,
     hierarchical_allreduce,
+    multipath_all_to_all,
+    ring_all_gather,
     ring_allreduce,
 )
 from .events import EventEngine
-from .flows import FluidNetwork
+from .flows import FluidNetwork, default_rx_gbs
 from .routing import Router, Transfer
 
 
@@ -125,6 +137,7 @@ class NetSim:
         latency_s: float = 1e-6,
         adaptive: bool = True,
         record_rates: bool = False,
+        rx_gbs: float | str | None = "auto",
     ) -> None:
         self.topo = topo or ub_mesh_pod()
         self.routing = routing
@@ -132,12 +145,21 @@ class NetSim:
         self.latency_s = latency_s
         self.adaptive = adaptive
         self.record_rates = record_rates
+        # receiver-egress (incast) cap: "auto" sizes it at the node's
+        # largest per-dimension clique allocation; None disables it
+        if rx_gbs == "auto":
+            self.rx_gbs: float | None = default_rx_gbs(self.topo)
+        else:
+            self.rx_gbs = rx_gbs
         self.last_network: FluidNetwork | None = None   # post-run inspection
 
     # -- plumbing ----------------------------------------------------------
     def _fresh(self) -> Router:
         net = FluidNetwork(
-            self.topo, EventEngine(), record_rates=self.record_rates
+            self.topo,
+            EventEngine(),
+            record_rates=self.record_rates,
+            rx_gbs=self.rx_gbs,
         )
         return Router(
             net,
@@ -230,34 +252,131 @@ class NetSim:
         return result
 
     # -- calibration back into the analytic stack --------------------------
-    def _axis_allreduce_dag(
-        self, dims: tuple[int, ...], size_bytes: float, width: int | None, tag: str
+    # collective "shape" -> (grid, hierarchical, single-ring) DAG compilers
+    _RING_SHAPES = {
+        "allreduce": (grid_allreduce, hierarchical_allreduce, ring_allreduce),
+        "all_gather": (grid_all_gather, hierarchical_all_gather, ring_all_gather),
+    }
+    # A2A calibration group cap — see A2A_CALIBRATION_MAX_NODES in
+    # core/cost_model.py (shared with the perf_model width canonicalization)
+    A2A_MAX_NODES = A2A_CALIBRATION_MAX_NODES
+
+    def _axis_ring_dag(
+        self,
+        dims: tuple[int, ...],
+        size_bytes: float,
+        width: int | None,
+        tag: str,
+        shape: str = "allreduce",
     ) -> FlowDAG | None:
-        """AllReduce DAG of one logical axis, optionally restricted to a
-        ``width``-chip group (full first-dim cliques widened across the
-        second dim, the ``_model_group`` convention).  Full square planes
-        run the cross-dim 2D multi-ring; narrower groups the hierarchical
-        per-dim schedule; ``width < 2`` means no collective at all."""
+        """Ring-schedule DAG (AllReduce / AllGather) of one logical axis,
+        optionally restricted to a ``width``-chip group (full first-dim
+        cliques widened across the second dim, the ``model_group``
+        convention).  Full square planes run the cross-dim 2D multi-ring;
+        narrower groups the hierarchical per-dim schedule; ``width < 2``
+        means no collective at all."""
+        grid_fn, hier_fn, ring_fn = self._RING_SHAPES[shape]
         if width is not None and width < 2:
             return None
         x = self.topo.shape[dims[0]]
         plane = math.prod(self.topo.shape[d] for d in dims)
         if width is None or width >= plane:
             if len(dims) == 2:
-                dag = grid_allreduce(self.topo, dims, size_bytes, tag=tag)
+                dag = grid_fn(self.topo, dims, size_bytes, tag=tag)
                 if dag is not None:
                     return dag
-            return hierarchical_allreduce(
-                self.topo, dims, size_bytes, tag=tag
-            )
+            return hier_fn(self.topo, dims, size_bytes, tag=tag)
         if width <= x or len(dims) == 1:
             nodes = clique_nodes(self.topo, dims[0])[: max(2, width)]
-            return ring_allreduce(self.topo, nodes, size_bytes, tag=tag)
+            return ring_fn(self.topo, nodes, size_bytes, tag=tag)
         boards = -(-width // x)
         coords = {dims[0]: tuple(range(x)), dims[1]: tuple(range(boards))}
-        return hierarchical_allreduce(
+        return hier_fn(
             self.topo, dims[:2], size_bytes, dim_coords=coords, tag=tag
         )
+
+    def a2a_group_cap(self, dims: tuple[int, ...]) -> int:
+        """Largest A2A calibration group for an axis over ``dims``: the EP
+        footprint convention (``compile_traffic_entry``) never exceeds two
+        first-dim cliques, and ``A2A_MAX_NODES`` bounds the explicit-relay
+        DAG size.  ``core.perf_model.NetsimPerfModel`` canonicalizes its
+        width keys against this same cap."""
+        plane = math.prod(self.topo.shape[d] for d in dims)
+        cap = min(self.A2A_MAX_NODES, plane)
+        if dims[0] == 0:
+            cap = min(cap, 2 * self.topo.shape[0])
+        return cap
+
+    def _axis_a2a_group(
+        self, dims: tuple[int, ...], width: int | None
+    ) -> list[int] | None:
+        """Node group an axis-level A2A calibration runs on: the EP
+        footprint convention (first-dim cliques widened across the second
+        dim), capped at ``a2a_group_cap``."""
+        cap = self.a2a_group_cap(dims)
+        w = min(width or cap, cap)
+        if w < 2:
+            return None
+        if dims[0] == 0:
+            return model_group(self.topo, w)
+        if len(dims) == 2:
+            return grid_plane_nodes(self.topo, dims)[:w]
+        return clique_nodes(self.topo, dims[0])[:w]
+
+    def _axis_shape_dag(
+        self,
+        dims: tuple[int, ...],
+        shape: str,
+        size_bytes: float,
+        width: int | None,
+        tag: str,
+    ) -> FlowDAG | None:
+        """Calibration DAG for one ``(axis-dims, shape)`` pair.
+        ``size_bytes`` is the per-chip payload in the matching CommModel
+        formula's convention (input for RS/A2A, gathered output for AG)."""
+        if shape in self._RING_SHAPES:
+            return self._axis_ring_dag(dims, size_bytes, width, tag, shape)
+        if shape == "all_to_all":
+            group = self._axis_a2a_group(dims, width)
+            if group is None:
+                return None
+            return multipath_all_to_all(
+                self.topo, group, size_bytes / len(group), tag=tag
+            )
+        if shape == "p2p":
+            nodes = clique_nodes(self.topo, dims[0])[:2]
+            if len(nodes) < 2:
+                return None
+            dag = FlowDAG(name=tag)
+            dag._add(src=nodes[0], dst=nodes[1], size=size_bytes, tag=tag)
+            return dag
+        raise ValueError(f"unknown collective shape {shape!r}")
+
+    def _axis_dims_map(
+        self, axes: tuple[str, ...] | None
+    ) -> dict[str, tuple[int, ...]]:
+        """Axis -> topology dims, the structural convention: dims (0, 1)
+        are the intra-rack "model" domain, the rest the inter-rack "data"
+        domain."""
+        axis_dims = {"model": (0, 1)}
+        if self.topo.ndim > 2:
+            axis_dims["data"] = tuple(range(2, self.topo.ndim))
+        if axes is not None:
+            axis_dims = {k: v for k, v in axis_dims.items() if k in axes}
+        return axis_dims
+
+    @staticmethod
+    def _wire_fraction(shape: str, n: int) -> float:
+        """Per-chip wire bytes of ``shape`` as a fraction of the payload —
+        the inverse of the matching ``CommModel`` formula, so the measured
+        bandwidth plugs straight back in."""
+        if n <= 1:
+            return 0.0
+        if shape == "allreduce":
+            return 2.0 * (n - 1) / n
+        if shape in ("all_gather", "reduce_scatter", "all_to_all"):
+            return (n - 1) / n
+        return 1.0                      # p2p
 
     def calibrated_axis_gbs(
         self,
@@ -268,45 +387,96 @@ class NetSim:
         widths: dict[str, int] | None = None,
         axes: tuple[str, ...] | None = None,
     ) -> dict[str, float]:
-        """Effective per-chip collective bandwidth per logical mesh axis,
+        """Effective per-chip AllReduce bandwidth per logical mesh axis,
         measured from netsim runs — in the units ``CommModel``'s
         ``gbs_per_chip`` uses, so a ``core.perf_model`` backend can feed
-        it back into ``core/simulator.simulate``.
+        it back into ``core/simulator.simulate``.  (The single-shape
+        predecessor of :meth:`calibrated_profile`; kept as the scalar
+        entry point.)
 
         The axis-size normalization must match the CommModel the override
         will be applied to: pass ``comm`` (its ``axes[..].size`` wins) or
         explicit ``axis_sizes``; the fallback is the production mapping's
-        16-wide model/data axes.  Axis->dims follows the structural
-        convention: dims (0, 1) are the intra-rack "model" domain, the
-        rest the inter-rack "data" domain.  ``widths`` optionally narrows
-        an axis' node group to the chips a parallelism group actually
-        spans (e.g. the TP*SP footprint), which is what makes the
-        calibration spec-dependent for the planner backend.
+        16-wide model/data axes.  ``widths`` optionally narrows an axis'
+        node group to the chips a parallelism group actually spans (e.g.
+        the TP*SP footprint), which is what makes the calibration
+        spec-dependent for the planner backend.
 
         Full square planes are measured on the cross-dim 2D multi-ring
         (Fig. 13), which keeps both dimensions' links busy every step —
         the hierarchical per-dim schedule only reaches about half of the
         plane's analytic bandwidth."""
-        axis_dims = {"model": (0, 1)}
-        if self.topo.ndim > 2:
-            axis_dims["data"] = tuple(range(2, self.topo.ndim))
-        if axes is not None:
-            axis_dims = {k: v for k, v in axis_dims.items() if k in axes}
+        prof = self.calibrated_profile(
+            size_bytes,
+            comm=comm,
+            axis_sizes=axis_sizes,
+            widths=widths,
+            axes=axes,
+            shapes=("allreduce",),
+        )
+        return {a: g for (a, _s), g in prof.gbs.items()}
+
+    def calibrated_profile(
+        self,
+        size_bytes: float = 64e6,
+        *,
+        comm: "CommModel | None" = None,
+        axis_sizes: dict[str, int] | None = None,
+        widths: "dict | None" = None,
+        axes: tuple[str, ...] | None = None,
+        shapes: tuple[str, ...] = COLLECTIVE_SHAPES,
+    ) -> CalibrationProfile:
+        """Effective per-chip bandwidth per ``(axis, collective shape)``,
+        measured by executing each shape's own flow DAG on this topology.
+
+        AllReduce/AllGather ride the multi-ring schedules (edge-disjoint,
+        one inbound flow per ring per node); All-to-All rides the
+        Fig. 14-(a) X-then-Y / Y-then-X split with explicit relay hops,
+        where relay contention and receiver-egress (incast) serialization
+        — modeled when this NetSim has ``rx_gbs`` enabled, the default —
+        price it strictly below the AllReduce number on any
+        multi-dimension axis.  ``reduce_scatter`` shares AllGather's wire
+        schedule and aliases its measurement instead of re-running it.
+
+        ``widths`` narrows the measurement group per axis; keys are either
+        an axis name or an ``(axis, shape)`` pair (the pair wins), so a
+        planner backend can calibrate the TP*SP footprint for ring shapes
+        and the EP footprint for A2A independently.  Callers wanting
+        memoization get it from ``core.perf_model.NetsimPerfModel``, which
+        caches per (topology, axis, shape, group-width, routing, payload)
+        — this method always measures."""
+        axis_dims = self._axis_dims_map(axes)
         if axis_sizes is None and comm is not None:
             axis_sizes = {k: a.size for k, a in comm.axes.items()}
         sizes = axis_sizes or {"model": 16, "data": 16}
-        out: dict[str, float] = {}
+
+        def width_of(axis: str, shape: str) -> int | None:
+            if not widths:
+                return None
+            return widths.get((axis, shape), widths.get(axis))
+
+        # reduce_scatter aliases the all_gather measurement (same wire
+        # schedule), so measure all_gather whenever either is requested
+        measured_shapes = tuple(dict.fromkeys(
+            "all_gather" if s == "reduce_scatter" else s for s in shapes
+        ))
+        gbs: dict[tuple[str, str], float] = {}
         for axis, dims in axis_dims.items():
-            width = (widths or {}).get(axis)
-            dag = self._axis_allreduce_dag(
-                dims, size_bytes, width, tag=f"cal-{axis}"
-            )
-            if dag is None:
-                continue
-            t = self.run_dag(dag).makespan_s
-            if t <= 0:
-                continue
             n = sizes.get(axis, 16)
-            wire = 2.0 * (n - 1) / n * size_bytes
-            out[axis] = wire / t / 1e9
-        return out
+            for shape in measured_shapes:
+                dag = self._axis_shape_dag(
+                    dims, shape, size_bytes, width_of(axis, shape),
+                    tag=f"cal-{axis}-{shape}",
+                )
+                if dag is None or not dag.tasks:
+                    continue
+                t = self.run_dag(dag).makespan_s
+                if t <= 0:
+                    continue
+                wire = self._wire_fraction(shape, n) * size_bytes
+                gbs[(axis, shape)] = wire / t / 1e9
+            if "reduce_scatter" in shapes and (axis, "all_gather") in gbs:
+                gbs[(axis, "reduce_scatter")] = gbs[(axis, "all_gather")]
+            if "all_gather" not in shapes:
+                gbs.pop((axis, "all_gather"), None)
+        return CalibrationProfile(gbs=gbs)

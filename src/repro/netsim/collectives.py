@@ -34,12 +34,19 @@ them would double-count links.  A2A/P2P tasks use the router's policy.
 from __future__ import annotations
 
 import itertools
+import logging
 import math
 from dataclasses import dataclass, field
 
-from ..core.multiring import clique_decomposition, grid_ring_decomposition
+from ..core.multiring import (
+    UnsupportedGridError,
+    clique_decomposition,
+    grid_ring_decomposition,
+)
 from ..core.topology import NDFullMesh
 from ..core.traffic import ParallelSpec, TrafficTable, WorkloadSpec, analyze_traffic
+
+log = logging.getLogger(__name__)
 
 Ring = tuple[int, ...]
 
@@ -233,8 +240,16 @@ def _grid_collective(
     dag: FlowDAG | None,
     tag: str,
 ) -> FlowDAG | None:
-    rings = grid_ring_decomposition(topo.shape[dims[0]], topo.shape[dims[1]])
-    if rings is None:
+    try:
+        rings = grid_ring_decomposition(
+            topo.shape[dims[0]], topo.shape[dims[1]]
+        )
+    except UnsupportedGridError as e:
+        log.info(
+            "%s: no cross-dim grid rings for dims %s (%s); falling back to "
+            "the per-dimension hierarchical schedule",
+            tag, dims, e.reason,
+        )
         return None
     dag = dag or FlowDAG(name=tag)
     if size_bytes <= 0:
@@ -297,6 +312,86 @@ def all_to_all(
     dag = dag or FlowDAG(name=tag)
     for src, dst in itertools.permutations(nodes, 2):
         dag._add(src=src, dst=dst, size=per_pair_bytes, deps=deps0, tag=tag)
+    return dag
+
+
+def multipath_all_to_all(
+    topo: NDFullMesh,
+    nodes: list[int],
+    per_pair_bytes: float,
+    *,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "mp-a2a",
+) -> FlowDAG:
+    """Multi-Path A2A (§5.1, Fig. 14-(a)) with EXPLICIT relay hops.
+
+    Each (src, dst) message whose coordinates differ in k ≥ 2 dimensions is
+    split in half over the first and last dimension orders (X-then-Y /
+    Y-then-X on a 2D plane), exactly the partitioning
+    ``core/alltoall.multipath_a2a_loads`` prices analytically; same-clique
+    pairs go direct.  Unlike :func:`all_to_all` — which hands whole
+    messages to the router's path policy — every hop here is its own
+    ``FlowTask`` chained by a data dep, so relays store-and-forward and the
+    many-to-one bursts at relay and destination nodes are visible to the
+    fluid model's receiver-egress (incast) caps.  Hops pin ``single_path``:
+    the XY/YX split IS the multipath structure, re-splitting would
+    double-count links.
+    """
+    dag = dag or FlowDAG(name=tag)
+    for src, dst in itertools.permutations(nodes, 2):
+        cs, cd = topo.coords(src), topo.coords(dst)
+        diff = [i for i in range(topo.ndim) if cs[i] != cd[i]]
+        orders = list(itertools.permutations(diff))
+        chosen = [orders[0], orders[-1]] if len(orders) > 1 else orders[:1]
+        share = per_pair_bytes / len(chosen)
+        for o, order in enumerate(chosen):
+            cur = list(cs)
+            prev = src
+            deps = deps0
+            for d in order:
+                cur[d] = cd[d]
+                nxt = topo.node_id(cur)
+                t = dag._add(
+                    src=prev,
+                    dst=nxt,
+                    size=share,
+                    deps=deps,
+                    single_path=True,
+                    tag=f"{tag}/o{o}",
+                )
+                deps = (t.tid,)
+                prev = nxt
+    return dag
+
+
+def moe_dispatch(
+    topo: NDFullMesh,
+    senders: list[int],
+    experts: list[int],
+    bytes_per_sender: float,
+    *,
+    deps0: tuple[int, ...] = (),
+    dag: FlowDAG | None = None,
+    tag: str = "moe-dispatch",
+) -> FlowDAG:
+    """MoE token dispatch (Fig. 14-(b)): every sender ships its routed
+    token tile, split uniformly, to the expert-owning nodes.  With more
+    senders than experts this is a many-to-one burst — the pattern whose
+    completion time the fluid model understates unless receiver-egress
+    (incast) caps are enabled; combine is the same DAG with the roles
+    swapped.  Tasks use the router's multi-path policy like
+    :func:`all_to_all`."""
+    dag = dag or FlowDAG(name=tag)
+    remote = [e for e in experts]
+    if not remote:
+        return dag
+    per_expert = bytes_per_sender / len(remote)
+    for src in senders:
+        for dst in remote:
+            if src == dst:
+                continue
+            dag._add(src=src, dst=dst, size=per_expert, deps=deps0, tag=tag)
     return dag
 
 
@@ -418,7 +513,7 @@ def hierarchical_all_gather(
 # ---------------------------------------------------------------------------
 
 
-def _model_group(topo: NDFullMesh, width: int) -> list[int]:
+def model_group(topo: NDFullMesh, width: int) -> list[int]:
     """A representative TP/SP group: one X clique widened across Y boards
     until ``width`` chips (the intra-rack high-bandwidth domain)."""
     x = topo.shape[0]
@@ -438,7 +533,7 @@ def compile_traffic_entry(
     """One transfer of one Table-1 technique as a flow DAG on ``topo``."""
     x = topo.shape[0]
     if technique in ("TP", "SP"):
-        group = _model_group(topo, p.tp * p.sp)
+        group = model_group(topo, p.tp * p.sp)
         if len(group) <= x:
             fn = ring_allreduce if technique == "TP" else ring_all_gather
             return fn(topo, group, per_transfer_bytes, tag=technique)
@@ -459,7 +554,7 @@ def compile_traffic_entry(
             topo, (0, 1), per_transfer_bytes, dim_coords=coords, tag=technique
         )
     if technique == "EP":
-        group = _model_group(topo, min(p.ep * 2, 2 * x))
+        group = model_group(topo, min(p.ep * 2, 2 * x))
         per_pair = per_transfer_bytes / max(1, len(group) - 1)
         return all_to_all(topo, group, per_pair, tag="EP")
     if technique == "PP":

@@ -13,6 +13,19 @@ The link inventory comes straight from ``core/topology.NDFullMesh``: every
 ``dims[dim].gbs_per_peer``.  Extra links (e.g. the Borrow strategy's
 switch-plane uplinks) can be added on top.
 
+**Receiver-egress (incast) contention**: fluid max-min over per-link
+capacities alone resolves many-to-one bursts instantaneously — N senders on
+N distinct full-mesh links all drain at full link rate, so the receiver
+absorbs N links' worth of traffic at once.  Real NPUs cannot: the ejection
+port into memory is finite, and MoE dispatch/combine or DP gradient bursts
+serialize behind it (pause/backpressure).  ``rx_gbs`` models this as one
+virtual ingress link per destination node, capacity = the node's ejection
+bandwidth, shared by every flow terminating there; the max-min allocator
+treats it exactly like a wire.  ``default_rx_gbs`` sizes it at the node's
+largest single-dimension clique allocation — wide enough that multi-ring
+collectives (≤ one inbound flow per ring per node) keep their full
+bandwidth, tight enough that cross-dimension incast serializes.
+
 Invariants maintained (and unit-tested):
 * sum of flow rates on a link never exceeds its capacity,
 * bytes delivered per flow equals the requested flow size,
@@ -33,6 +46,22 @@ DirectedLink = tuple[int, int]          # (u, v), u -> v
 _EPS_BYTES = 1e-6                       # "done" threshold
 _EPS_RATE = 1e-12
 
+RX_PORT = -1                            # sentinel endpoint of virtual ingress
+                                        # links: (RX_PORT, node) caps the
+                                        # receiver-egress bandwidth of `node`
+
+
+def default_rx_gbs(topo: NDFullMesh) -> float:
+    """Default per-node receiver-egress (ejection) bandwidth, GB/s.
+
+    The node's largest single-dimension clique allocation: the UB IO die is
+    provisioned so its widest collective domain can sink at full multi-ring
+    rate (at most one inbound flow per ring per node — exactly the per-dim
+    allocation), while many-to-one bursts that fan in across several
+    dimensions at once exceed it and serialize.
+    """
+    return max(d.gbs_total for d in topo.dims)
+
 
 @dataclass
 class Flow:
@@ -48,9 +77,11 @@ class Flow:
     start_s: float = 0.0
     end_s: float | None = None
     links: tuple[DirectedLink, ...] = ()   # consecutive path pairs, cached
+    constraints: tuple[DirectedLink, ...] = ()  # links + virtual rx link
 
     def __post_init__(self) -> None:
         self.links = tuple(zip(self.path, self.path[1:]))
+        self.constraints = self.links
 
     @property
     def done(self) -> bool:
@@ -66,6 +97,7 @@ class FluidNetwork:
         engine: EventEngine | None = None,
         *,
         record_rates: bool = False,
+        rx_gbs: float | dict[int, float] | None = None,
     ) -> None:
         self.topo = topo
         self.engine = engine or EventEngine()
@@ -74,6 +106,13 @@ class FluidNetwork:
             gbs = topo.dims[d].gbs_per_peer * 1e9
             self.capacity[(u, v)] = gbs
             self.capacity[(v, u)] = gbs
+        # receiver-egress caps, bytes/s per node (empty = unconstrained)
+        if rx_gbs is None:
+            self.rx_cap: dict[int, float] = {}
+        elif isinstance(rx_gbs, dict):
+            self.rx_cap = {n: g * 1e9 for n, g in rx_gbs.items()}
+        else:
+            self.rx_cap = {n: rx_gbs * 1e9 for n in range(topo.num_nodes)}
         self.failed: set[DirectedLink] = set()
         self.flows: dict[int, Flow] = {}                 # active flows
         self.completed: dict[int, Flow] = {}
@@ -133,6 +172,9 @@ class FluidNetwork:
         for l in flow.links:
             if l not in self.capacity:
                 raise ValueError(f"path {path} uses nonexistent link {l}")
+        dst = flow.path[-1]
+        if dst in self.rx_cap:
+            flow.constraints = flow.links + ((RX_PORT, dst),)
         if len(path) < 2 or size <= _EPS_BYTES:
             # degenerate: local copy, completes instantly
             flow.remaining = 0.0
@@ -174,6 +216,9 @@ class FluidNetwork:
         All links at the current minimum fair share freeze together (one
         water-filling level per round), which collapses the symmetric
         collective case — every ring link equally loaded — to one round.
+        A flow's constraint set is its wire links plus (when ``rx_cap`` is
+        configured) the virtual ``(RX_PORT, dst)`` ingress link shared by
+        every flow terminating at ``dst`` — incast serializes there.
         """
         active = [self.flows[k] for k in sorted(self.flows)]
         for f in active:
@@ -182,9 +227,13 @@ class FluidNetwork:
         count: dict[DirectedLink, int] = {}
         flows_on: dict[DirectedLink, list[Flow]] = {}
         for f in active:
-            for l in f.links:
+            for l in f.constraints:
                 if l not in residual:
-                    residual[l] = self.effective_capacity(l)
+                    residual[l] = (
+                        self.rx_cap[l[1]]
+                        if l[0] == RX_PORT
+                        else self.effective_capacity(l)
+                    )
                     count[l] = 0
                     flows_on[l] = []
                 count[l] += 1
@@ -210,7 +259,7 @@ class FluidNetwork:
                     f.rate = best
                     frozen.add(f.fid)
                     n_left -= 1
-                    for fl in f.links:
+                    for fl in f.constraints:
                         residual[fl] = max(0.0, residual[fl] - best)
                         count[fl] -= 1
         if self.record_rates:

@@ -67,9 +67,33 @@ class TestGridMultiRing:
                 dims_used.add(0 if a % 8 == b % 8 else 1)
             assert dims_used == {0, 1}
 
-    def test_non_square_returns_none(self):
-        assert multiring.grid_ring_decomposition(8, 2) is None
-        assert multiring.grid_ring_decomposition(4, 8) is None
+    def test_non_square_raises_structured_error(self):
+        for x, y in ((8, 2), (4, 8)):
+            with pytest.raises(multiring.UnsupportedGridError) as ei:
+                multiring.grid_ring_decomposition(x, y)
+            assert (ei.value.x, ei.value.y) == (x, y)
+            assert "non-square" in ei.value.reason
+
+    def test_non_square_callers_fall_back_and_log(self, caplog):
+        # grid_effective_bandwidth_gbs: rectangular (Z=4, A=2) plane -> None
+        from repro.core.topology import ACTIVE_ELECTRICAL, DimSpec, NDFullMesh
+
+        rect = NDFullMesh(
+            dims=(
+                DimSpec("Z", 4, ACTIVE_ELECTRICAL, 2),
+                DimSpec("A", 2, ACTIVE_ELECTRICAL, 2),
+            )
+        )
+        with caplog.at_level("INFO", logger="repro.core.multiring"):
+            assert multiring.grid_effective_bandwidth_gbs(rect, (0, 1)) is None
+        assert any("unavailable" in r.message for r in caplog.records)
+        # netsim's DAG compiler: same plane -> grid compiler declines (the
+        # caller then builds the per-dim hierarchical schedule) and logs it
+        from repro.netsim.collectives import grid_allreduce
+
+        with caplog.at_level("INFO", logger="repro.netsim.collectives"):
+            assert grid_allreduce(rect, (0, 1), 8e6) is None
+        assert any("hierarchical" in r.message for r in caplog.records)
 
     def test_grid_bandwidth_beats_sum_of_chains(self):
         rack = ub_mesh_rack()

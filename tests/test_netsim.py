@@ -182,6 +182,133 @@ class TestGridMultiRing:
         assert cal["model"] >= 0.80 * analytic_model_gbs
 
 
+class TestIncast:
+    """Receiver-egress caps: many-to-one bursts serialize (ISSUE 3)."""
+
+    def test_n_to_one_takes_n_times_single_flow_under_egress_cap(self):
+        # 7 senders on 7 DISTINCT X links into node 0: the fluid model
+        # resolves this at full rate per link; under an egress cap of one
+        # link's bandwidth it must take ~7x the single-flow time
+        topo = ub_mesh_rack()
+        x_gbs = topo.dims[0].gbs_per_peer
+        net = FluidNetwork(topo, rx_gbs=x_gbs)
+        net.add_flow((1, 0), 25e9)
+        net.run()
+        t1 = net.engine.now
+        net = FluidNetwork(topo, rx_gbs=x_gbs)
+        for s in range(1, 8):
+            net.add_flow((s, 0), 25e9)
+        net.run()
+        assert math.isclose(net.engine.now, 7 * t1, rel_tol=1e-6)
+        # without the cap the same burst resolves in single-flow time
+        net = FluidNetwork(topo)
+        for s in range(1, 8):
+            net.add_flow((s, 0), 25e9)
+        net.run()
+        assert math.isclose(net.engine.now, t1, rel_tol=1e-6)
+
+    def test_rx_cap_never_exceeded(self):
+        # sum of inbound flow rates at a capped node stays <= the cap
+        topo = ub_mesh_rack()
+        cap_gbs = 40.0
+        net = FluidNetwork(topo, rx_gbs=cap_gbs)
+        for s in range(1, 8):
+            net.add_flow((s, 0), 5e9)
+        net._recompute()
+        inbound = sum(
+            f.rate for f in net.flows.values() if f.path[-1] == 0
+        )
+        assert inbound <= cap_gbs * 1e9 * (1 + 1e-6)
+
+    def test_moe_dispatch_strictly_slower_than_incast_blind_fluid(self):
+        # 64 token-holders dispatching to 4 hot expert chips: the MoE
+        # all_to_all burst must strictly exceed its no-incast fluid time
+        from repro.netsim.collectives import model_group, moe_dispatch
+
+        topo = ub_mesh_rack()
+        dag = moe_dispatch(
+            topo, list(range(topo.num_nodes)), model_group(topo, 4), 16e6
+        )
+        capped = NetSim(topo, routing=Routing.DETOUR).run_dag(dag)
+        fluid = NetSim(topo, routing=Routing.DETOUR, rx_gbs=None).run_dag(dag)
+        assert capped.incomplete == 0 and fluid.incomplete == 0
+        assert capped.makespan_s > fluid.makespan_s * 1.2
+
+    def test_default_rx_cap_preserves_multiring_allreduce(self):
+        # the auto cap (largest per-dim clique allocation) must NOT slow
+        # the multi-ring AllReduce: <= one inbound flow per ring per node
+        topo = ub_mesh_rack()
+        nodes = clique_nodes(topo, 0)
+        dag = ring_allreduce(topo, nodes, 32e6)
+        with_cap = NetSim(topo, routing=Routing.DETOUR).run_dag(dag)
+        without = NetSim(topo, routing=Routing.DETOUR, rx_gbs=None).run_dag(dag)
+        assert math.isclose(
+            with_cap.makespan_s, without.makespan_s, rel_tol=1e-9
+        )
+
+
+class TestCalibrationProfile:
+    """(axis, collective-shape)-keyed calibration (ISSUE 3 tentpole)."""
+
+    def test_a2a_calibrated_at_most_allreduce_on_model_axis(self):
+        # the crossval contract: the Multi-Path A2A rides relay hops and
+        # the cross-board cut, so its effective bandwidth must sit at or
+        # below (in practice far below) the multi-ring AllReduce number
+        from repro.core.cost_model import build_comm_model
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        sim = NetSim(ub_mesh_rack(), routing=Routing.DETOUR)
+        prof = sim.calibrated_profile(
+            16e6, comm=comm, axes=("model",),
+            shapes=("allreduce", "all_to_all"),
+        )
+        ar = prof.get("model", "allreduce")
+        a2a = prof.get("model", "all_to_all")
+        assert ar is not None and a2a is not None
+        assert a2a <= ar
+        assert a2a < 0.6 * ar          # relay + cut effects are large
+
+    def test_reduce_scatter_aliases_all_gather(self):
+        from repro.core.cost_model import build_comm_model
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        sim = NetSim(ub_mesh_rack(), routing=Routing.DETOUR)
+        prof = sim.calibrated_profile(
+            8e6, comm=comm, axes=("model",),
+            shapes=("all_gather", "reduce_scatter"),
+        )
+        assert prof.get("model", "reduce_scatter") == prof.get(
+            "model", "all_gather"
+        )
+
+    def test_calibrated_axis_gbs_matches_profile_allreduce(self):
+        # the legacy scalar entry point is the allreduce slice of the
+        # profile — back-compat for PR-2 consumers
+        sim = NetSim(ub_mesh_rack(), routing=Routing.DETOUR)
+        scalar = sim.calibrated_axis_gbs(8e6)
+        prof = sim.calibrated_profile(8e6, shapes=("allreduce",))
+        assert scalar["model"] == pytest.approx(
+            prof.get("model", "allreduce")
+        )
+
+    def test_profile_apply_prices_shapes_separately(self):
+        from repro.core.cost_model import (
+            CalibrationProfile, build_comm_model,
+        )
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        prof = CalibrationProfile(
+            gbs={("model", "allreduce"): 140.0, ("model", "all_to_all"): 45.0}
+        )
+        cm = prof.apply(comm)
+        size = 64e6
+        assert cm.axes["model"].gbs_per_chip == pytest.approx(140.0)
+        # A2A rides its own (much lower) measured bandwidth...
+        assert cm.all_to_all("model", size) > comm.all_to_all("model", size)
+        # ...while an unmeasured axis is untouched
+        assert cm.axes["data"] == comm.axes["data"]
+
+
 class TestRoutingPolicies:
     def test_fig19_ordering_under_contention(self):
         topo = mesh_2d()

@@ -199,3 +199,61 @@ class TestPerfModelBackends:
         cn = netsim.comm_model(None)
         for name, a in cn.axes.items():
             assert a.gbs_per_chip <= ca.axes[name].gbs_per_chip * 1.001
+
+
+class TestShapeAwareProfile:
+    """AllReduce-proxy vs CalibrationProfile pricing (ISSUE 3 tentpole):
+    one scalar per axis systematically flatters expert parallelism; the
+    shape-keyed profile prices EP's A2A on its own measured bandwidth and
+    flips the planner's winner on the canonical divergence config."""
+
+    W_DIV = traffic_mod.a2a_divergence_workload()
+
+    @pytest.fixture(scope="class")
+    def backends(self):
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        kw = dict(topo=ub_mesh_pod(), size_bytes=16e6)
+        return (
+            NetsimPerfModel(comm, shapes=("allreduce",), **kw),   # PR-2 proxy
+            NetsimPerfModel(comm, **kw),                          # full profile
+        )
+
+    def test_winner_flips_on_a2a_pricing(self, backends):
+        proxy, profile = backends
+        sp = planner.best_parallel_spec(self.W_DIV, 256, proxy)
+        sf = planner.best_parallel_spec(self.W_DIV, 256, profile)
+        assert sp != sf
+        # the proxy maxes out expert parallelism because the dispatch A2A
+        # is priced at ring bandwidth; the profile retreats to smaller,
+        # clique-local EP groups
+        assert sf.ep < sp.ep
+        # and under the shape-aware prices its own winner really is faster
+        t_sp = simulate(self.W_DIV, sp, profile).iteration_s
+        t_sf = simulate(self.W_DIV, sf, profile).iteration_s
+        assert t_sf <= t_sp
+
+    def test_profile_comm_model_carries_shape_bandwidths(self, backends):
+        _, profile = backends
+        p = ParallelSpec(tp=2, sp=4, pp=1, dp=32, ep=8, microbatches=1)
+        a = profile.comm_model(p).axes["model"]
+        assert a.has_shape("all_to_all")
+        # ep=8 spans two boards: A2A rides the cross-board cut, well below
+        # the ring bandwidth
+        assert a.bw_for("all_to_all") < a.bw_for("allreduce")
+
+    def test_proxy_backend_prices_all_shapes_on_scalar(self, backends):
+        proxy, _ = backends
+        a = proxy.comm_model(None).axes["model"]
+        assert not a.has_shape("all_to_all")
+        assert a.bw_for("all_to_all") == a.gbs_per_chip
+
+    def test_analytic_perf_model_carries_profile(self):
+        from repro.core.cost_model import CalibrationProfile
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        prof = CalibrationProfile(gbs={("model", "all_to_all"): 45.0})
+        pm = AnalyticPerfModel(comm, profile=prof)
+        assert pm.comm_model(None).axes["model"].bw_for("all_to_all") == 45.0
+        # override_axis must not drop the profile
+        pm2 = pm.override_axis("pod", AxisCost(2, 10.0, 1e-6))
+        assert pm2.profile is prof
