@@ -1,0 +1,179 @@
+"""SuperPod-scale netsim benchmarks: solver speedup + coarsened multi-pod.
+
+Three claims, each one function (same ``(derived, ref)`` contract as
+``paper_tables.py``), run by ``run.py --suite scale`` and recorded in
+``BENCH_netsim.json``:
+
+* **pod_calibration_speed** — the ISSUE-4 acceptance bar: the vectorized
+  solver + symmetric-flow aggregation must run the existing pod-level
+  ``calibrated_axis_gbs`` benchmark >= 5x faster than the reference
+  pure-Python configuration while reproducing the measured GB/s within
+  1%.  The ``speedup`` ratio is measured *within one process*, so the
+  committed baseline transfers across machines — CI fails the suite if
+  it regresses more than 25% (see ``REGRESSION_GUARDS``).
+* **superpod_coarse** — rack-coarsened multi-pod calibration accuracy:
+  cross-pod DP bandwidth within 20% of the analytic DCN model on an
+  uncontended config, coarse inter-rack bandwidth within 5% of the exact
+  chip-level pod measurement, and a full 8-pod (8192-chip) coarse DP
+  hierarchical AllReduce executed end-to-end.
+* **superpod_plan** — a 4-pod (4096-chip) coarsened
+  ``NetsimPerfModel``-backed ``plan()`` completes within the 60 s budget.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+from repro.core.cost_model import Routing, build_comm_model
+from repro.core.perf_model import NetsimPerfModel
+from repro.core.planner import plan
+from repro.core.topology import SuperPod, ub_mesh_pod
+from repro.core.traffic import moe_2t_workload
+from repro.netsim import NetSim
+from repro.netsim.coarsen import (
+    coarse_calibrated_profile,
+    coarse_netsim,
+    coarsen_superpod,
+)
+
+_CAL_BYTES = 16e6
+
+
+def netsim_pod_calibration_speed():
+    """Vectorized+aggregated vs reference pod-level calibration (>= 5x)."""
+    comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+
+    def run(solver: str, aggregate: bool) -> tuple[float, dict]:
+        sim = NetSim(
+            ub_mesh_pod(),
+            routing=Routing.DETOUR,
+            solver=solver,
+            aggregate=aggregate,
+        )
+        t0 = time.perf_counter()
+        cal = sim.calibrated_axis_gbs(_CAL_BYTES, comm=comm)
+        return time.perf_counter() - t0, {k: float(v) for k, v in cal.items()}
+
+    fast_s, fast_cal = run("vectorized", True)
+    base_s, base_cal = run("reference", False)
+    worst_dev = max(
+        abs(fast_cal[k] - base_cal[k]) / base_cal[k] for k in base_cal
+    )
+    derived = {
+        "calibrated_s": round(fast_s, 4),
+        "reference_s": round(base_s, 4),
+        "speedup": round(base_s / fast_s, 2),
+        "gbs_rel_dev": round(worst_dev, 6),
+        "speedup_ge_5x": base_s / fast_s >= 5.0,
+        "gbs_within_1pct": worst_dev <= 0.01,
+    }
+    derived.update({f"{k}_gbs": round(v, 1) for k, v in sorted(fast_cal.items())})
+    ref = {"min_speedup": 5.0, "max_gbs_dev": 0.01}
+    return derived, ref
+
+
+def netsim_superpod_coarse():
+    """Rack-coarsened multi-pod calibration: accuracy + 8192-chip run."""
+    pod = ub_mesh_pod()
+    comm = build_comm_model(multi_pod=True, routing=Routing.DETOUR)
+    analytic_pod = comm.axes["pod"].gbs_per_chip
+
+    sp4 = SuperPod(pod=pod, n_pods=4)
+    cm4 = coarsen_superpod(sp4)
+    t0 = time.perf_counter()
+    prof = coarse_calibrated_profile(
+        cm4, 64e6, axis_sizes={"pod": 4, "data": 16},
+        axes=("pod", "data"), shapes=("allreduce",),
+    )
+    cal_s = time.perf_counter() - t0
+    pod_bw = prof.get("pod", "allreduce")
+    pod_err = abs(pod_bw - analytic_pod) / analytic_pod
+    exact_data = NetSim(pod, routing=Routing.DETOUR).calibrated_profile(
+        _CAL_BYTES, comm=build_comm_model(multi_pod=False, routing=Routing.DETOUR),
+        axes=("data",), shapes=("allreduce",),
+    ).get("data", "allreduce")
+    coarse_data = coarse_calibrated_profile(
+        cm4, _CAL_BYTES, axis_sizes={"data": 16}, axes=("data",),
+        shapes=("allreduce",), latency_s=1e-6,
+    ).get("data", "allreduce")
+    data_err = abs(coarse_data - exact_data) / exact_data
+
+    # full 8-pod SuperPod (8192 chips): contended DP AllReduce across the
+    # whole coarse mesh (every rack participates, Z+A+HRS dims all busy)
+    from repro.netsim.collectives import hierarchical_allreduce
+
+    sp8 = SuperPod(pod=pod, n_pods=8)
+    cm8 = coarsen_superpod(sp8)
+    dims = tuple(range(cm8.topo.ndim))
+    dag = hierarchical_allreduce(
+        cm8.topo, dims, 64e6 * cm8.chips_per_node, tag="superpod-dp"
+    )
+    t0 = time.perf_counter()
+    r = coarse_netsim(cm8).run_dag(dag)
+    run8_s = time.perf_counter() - t0
+    derived = {
+        "pod_axis_gbs": round(pod_bw, 2),
+        "pod_axis_analytic_gbs": round(analytic_pod, 2),
+        "pod_axis_rel_err": round(pod_err, 4),
+        "pod_within_20pct": pod_err <= 0.20,
+        "data_axis_coarse_gbs": round(coarse_data, 2),
+        "data_axis_exact_gbs": round(exact_data, 2),
+        "data_axis_rel_err": round(data_err, 4),
+        "coarse_cal_s": round(cal_s, 4),
+        "superpod8_nodes": cm8.topo.num_nodes,
+        "superpod8_chips": cm8.num_chips,
+        "superpod8_dp_ms": round(r.makespan_s * 1e3, 3),
+        "superpod8_wall_s": round(run8_s, 3),
+        "superpod8_complete": r.incomplete == 0,
+    }
+    ref = {"max_pod_err": 0.20, "note": "analytic DCN pod axis = uplink/chips"}
+    return derived, ref
+
+
+def netsim_superpod_plan():
+    """4-pod (4096-chip) coarsened NetsimPerfModel plan() under 60 s."""
+    sp = SuperPod(pod=ub_mesh_pod(), n_pods=4)
+    base = build_comm_model(multi_pod=True, routing=Routing.DETOUR)
+    base = base.override_axis("pod", replace(base.axes["pod"], size=4))
+    perf = NetsimPerfModel(
+        base, topo=ub_mesh_pod(), size_bytes=64e6, superpod=sp
+    )
+    w, _ = moe_2t_workload()
+    t0 = time.perf_counter()
+    rep = plan(w, 4096, perf)
+    wall = time.perf_counter() - t0
+    best = rep[0]
+    cm = perf.comm_model(best.spec)
+    derived = {
+        "plan_wall_s": round(wall, 2),
+        "under_60s": wall < 60.0,
+        "chips": 4096,
+        "n_enumerated": rep.n_enumerated,
+        "winner": str(best.spec),
+        "iter_s": round(best.iteration_s, 3),
+        "pod_axis_gbs": round(cm.axes["pod"].gbs_per_chip, 2),
+    }
+    ref = {"budget_s": 60.0}
+    return derived, ref
+
+
+SCALE_BENCHMARKS = {
+    "netsim_pod_calibration_speed": netsim_pod_calibration_speed,
+    "netsim_superpod_coarse": netsim_superpod_coarse,
+    "netsim_superpod_plan": netsim_superpod_plan,
+}
+
+# (benchmark, derived key, direction): guarded against the committed
+# BENCH_netsim.json by ``run.py --baseline``.  Both metrics are same-run
+# ratios (vectorized vs reference in one process), so they transfer
+# across machine speeds; "higher" means new >= old * (1 - threshold)
+# must hold, "lower" means new <= old * (1 + threshold) (+ a tiny
+# absolute slack so a 0.0 baseline tolerates fp-accumulation drift).
+# Independent of the baseline, ``run.py`` fails the scale suite whenever
+# any derived boolean bar (speedup_ge_5x, gbs_within_1pct,
+# pod_within_20pct, under_60s, superpod8_complete, ...) comes out False.
+REGRESSION_GUARDS = (
+    ("netsim_pod_calibration_speed", "speedup", "higher"),
+    ("netsim_pod_calibration_speed", "gbs_rel_dev", "lower"),
+)

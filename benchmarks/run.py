@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run                 # full suite
     PYTHONPATH=src python -m benchmarks.run --suite smoke   # <30 s netsim CI
     PYTHONPATH=src python -m benchmarks.run --suite smoke --json out.json
+    PYTHONPATH=src python -m benchmarks.run --suite scale \
+        --json BENCH_netsim.json --baseline BENCH_netsim.json
 
 Prints ``name,us_per_call,derived`` CSV; `derived` is `key=value|...` pairs
 of computed numbers with the paper's reference values interleaved as
@@ -18,6 +20,15 @@ recovery, the A2A-vs-AllReduce calibration crossval) plus the
 planner-backend comparison (analytic vs netsim-calibrated spec rankings
 incl. the AllReduce-proxy vs CalibrationProfile flip, < 10 s) so
 network-simulator and planner regressions are caught by default.
+
+The ``scale`` suite (``benchmarks/netsim_scale.py``) records the netsim
+perf trajectory: the pod-level calibration speedup (vectorized solver +
+symmetric aggregation vs the reference configuration), the rack-coarsened
+multi-pod calibration accuracy, and the 4096-chip coarsened plan budget.
+``--baseline PATH`` compares the run against a committed
+``BENCH_netsim.json`` and exits non-zero when a guarded metric (e.g. the
+calibration speedup, a same-run ratio that transfers across machine
+speeds) regresses more than ``--regression-threshold``.
 """
 
 from __future__ import annotations
@@ -32,14 +43,60 @@ def _fmt(d: dict) -> str:
     return "|".join(f"{k}={v}" for k, v in d.items())
 
 
+def _check_regressions(
+    records: list[dict], baseline_path: str, threshold: float
+) -> list[str]:
+    """Compare guarded metrics against a committed baseline JSON."""
+    from benchmarks.netsim_scale import REGRESSION_GUARDS
+
+    with open(baseline_path) as fh:
+        base = {
+            r["name"]: r.get("derived", {})
+            for r in json.load(fh).get("benchmarks", [])
+        }
+    new = {r["name"]: r.get("derived", {}) for r in records}
+    problems = []
+    for bench, key, direction in REGRESSION_GUARDS:
+        if bench not in base or key not in base[bench]:
+            continue                      # baseline predates this guard
+        old_v = float(base[bench][key])
+        if bench not in new or key not in new[bench]:
+            problems.append(f"{bench}.{key}: missing from this run")
+            continue
+        new_v = float(new[bench][key])
+        if direction == "higher":
+            ok = new_v >= old_v * (1 - threshold)
+        else:
+            ok = new_v <= old_v * (1 + threshold) + 1e-6
+        if not ok:
+            problems.append(
+                f"{bench}.{key}: {new_v:g} vs baseline {old_v:g} "
+                f"(>{threshold:.0%} regression, direction={direction})"
+            )
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--suite", choices=("full", "smoke"), default="full")
+    ap.add_argument("--suite", choices=("full", "smoke", "scale"), default="full")
     ap.add_argument(
         "--json",
         metavar="PATH",
         default=None,
         help="also write structured results to PATH (CI artifact)",
+    )
+    ap.add_argument(
+        "--baseline",
+        metavar="PATH",
+        default=None,
+        help="committed benchmark JSON to guard regressions against "
+        "(scale suite)",
+    )
+    ap.add_argument(
+        "--regression-threshold",
+        type=float,
+        default=0.25,
+        help="allowed relative regression on guarded metrics (default 25%%)",
     )
     args = ap.parse_args()
 
@@ -61,6 +118,10 @@ def main() -> None:
 
     if args.suite == "smoke":
         benchmarks = {**SMOKE_BENCHMARKS, **PLANNER_BENCHMARKS}
+    elif args.suite == "scale":
+        from benchmarks.netsim_scale import SCALE_BENCHMARKS
+
+        benchmarks = SCALE_BENCHMARKS
     else:
         from benchmarks.paper_tables import ALL_BENCHMARKS
 
@@ -120,6 +181,25 @@ def main() -> None:
                 indent=2,
                 default=str,
             )
+    if args.suite == "scale":
+        # the scale benchmarks emit their acceptance bars as booleans
+        # (speedup_ge_5x, pod_within_20pct, under_60s, ...); a False bar
+        # fails the suite even without a --baseline to diff against
+        for rec in records:
+            for k, v in rec.get("derived", {}).items():
+                if v is False:
+                    print(
+                        f"BAR FAILED: {rec['name']}.{k} is False",
+                        file=sys.stderr,
+                    )
+                    failures += 1
+    if args.baseline:
+        problems = _check_regressions(
+            records, args.baseline, args.regression_threshold
+        )
+        for p in problems:
+            print(f"REGRESSION: {p}", file=sys.stderr)
+        failures += len(problems)
     if failures:
         sys.exit(1)
 

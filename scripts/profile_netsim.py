@@ -1,0 +1,76 @@
+"""Profiling harness for netsim perf work: a pod-level calibration run.
+
+    PYTHONPATH=src python scripts/profile_netsim.py
+    PYTHONPATH=src python scripts/profile_netsim.py --solver reference --no-aggregate
+    PYTHONPATH=src python scripts/profile_netsim.py --top 20 --size-bytes 64e6
+
+Times ``NetSim.calibrated_axis_gbs`` on the 1024-chip UB-Mesh pod (the
+benchmark the ISSUE-4 speedup targets are measured on) and prints the
+top-N cumulative cProfile hotspots, so future perf PRs have a baseline
+command: run it before and after, compare the wall time and the table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--solver",
+        choices=("vectorized", "reference"),
+        default="vectorized",
+        help="max-min solver backend (netsim/solver.py)",
+    )
+    ap.add_argument(
+        "--no-aggregate",
+        action="store_true",
+        help="expand multi-ring steps into per-pair flows (the pre-ISSUE-4 "
+        "execution mode)",
+    )
+    ap.add_argument("--size-bytes", type=float, default=16e6)
+    ap.add_argument("--top", type=int, default=10, help="hotspots to print")
+    ap.add_argument(
+        "--sort", default="cumulative", help="pstats sort key (cumulative/tottime)"
+    )
+    args = ap.parse_args()
+
+    from repro.core.cost_model import Routing, build_comm_model
+    from repro.core.topology import ub_mesh_pod
+    from repro.netsim import NetSim
+
+    comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+    sim = NetSim(
+        ub_mesh_pod(),
+        routing=Routing.DETOUR,
+        solver=args.solver,
+        aggregate=not args.no_aggregate,
+    )
+    # untimed warm-up so one-time costs (path caches, coords memo) don't
+    # pollute the profile of the steady state
+    sim.calibrated_axis_gbs(1e6, comm=comm)
+
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    cal = sim.calibrated_axis_gbs(args.size_bytes, comm=comm)
+    prof.disable()
+    wall = time.perf_counter() - t0
+
+    print(
+        f"pod calibrated_axis_gbs(size={args.size_bytes:.0e}, "
+        f"solver={args.solver}, aggregate={not args.no_aggregate}): "
+        f"{wall:.3f} s wall"
+    )
+    for axis, gbs in sorted(cal.items()):
+        print(f"  {axis}: {gbs:.1f} GB/s")
+    print(f"\ntop {args.top} by {args.sort}:")
+    pstats.Stats(prof).sort_stats(args.sort).print_stats(args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -49,8 +49,12 @@ from .cost_model import (
     CalibrationProfile,
     CommModel,
 )
-from .topology import NDFullMesh, ub_mesh_pod
+from .topology import NDFullMesh, SuperPod, ub_mesh_pod
 from .traffic import ParallelSpec
+
+# collective shapes that cross the HRS pod tier (DP gradient traffic and
+# pipeline boundaries); EP's all-to-all never leaves the model axis
+_POD_SHAPES = ("allreduce", "all_gather", "reduce_scatter", "p2p")
 
 
 @runtime_checkable
@@ -141,6 +145,15 @@ class NetsimPerfModel:
     shape-aware pricing changes planner decisions).  ``rx_gbs`` is the
     receiver-egress (incast) cap handed to netsim ("auto" = the node's
     largest per-dim clique allocation).
+
+    ``superpod`` unlocks multi-pod pricing: the "pod" axis — previously
+    pinned to its analytic DCN cost because the chip-level pod topology
+    cannot see the HRS tier — is calibrated on the **rack-coarsened**
+    SuperPod mesh (``netsim/coarsen.py``: racks become super-nodes, the
+    Clos tier an IO-capped extra dimension), so cross-pod DP/PP traffic
+    is priced on measured multi-pod bandwidths.  The memo key gains the
+    coarsening level (``coarsen_level``), so rack- and pod-granularity
+    calibrations never alias.
     """
 
     base: CommModel
@@ -150,6 +163,8 @@ class NetsimPerfModel:
     pinned: dict[str, AxisCost] = field(default_factory=dict)
     shapes: tuple[str, ...] = COLLECTIVE_SHAPES
     rx_gbs: float | str | None = "auto"
+    superpod: SuperPod | None = None
+    coarsen_level: str = "rack"
 
     @property
     def backend(self) -> str:
@@ -161,7 +176,10 @@ class NetsimPerfModel:
     ) -> dict[tuple[str, str], float]:
         """(axis, shape) -> measured GB/s for the requested group widths,
         via the shared cross-instance cache; ``reduce_scatter`` aliases
-        the ``all_gather`` measurement (same wire schedule)."""
+        the ``all_gather`` measurement (same wire schedule).  "pod"-axis
+        entries are measured on the rack-coarsened SuperPod mesh; their
+        cache key carries the coarsening level and the SuperPod geometry
+        instead of the chip-level topology key."""
         from ..netsim import NetSim  # deferred: core must not hard-require netsim
 
         key_base = (
@@ -171,10 +189,25 @@ class NetsimPerfModel:
             self.latency_s,
             self.rx_gbs,
         )
+        coarse_tag = ()
+        if self.superpod is not None:
+            # the coarse capacities derive from the SuperPod's OWN pod
+            # (trunk widths, racks per pod), which need not equal
+            # self.topo — key on its geometry too so distinct SuperPods
+            # never alias in the shared cache
+            coarse_tag = (
+                "coarse",
+                self.coarsen_level,
+                self.superpod.n_pods,
+                self.superpod.uplink_lanes_per_rack,
+                _topo_key(self.superpod.pod),
+            )
 
         def key(axis: str, shape: str, w: int | None) -> tuple:
             if shape == "reduce_scatter":
                 shape = "all_gather"
+            if axis == "pod":
+                return key_base + coarse_tag + (axis, shape, w)
             return key_base + (axis, shape, w)
 
         missing = {
@@ -182,14 +215,16 @@ class NetsimPerfModel:
             for (axis, shape), w in widths.items()
             if key(axis, shape, w) not in _CALIBRATION_CACHE
         }
-        if missing:
+        pod_missing = {k: w for k, w in missing.items() if k[0] == "pod"}
+        chip_missing = {k: w for k, w in missing.items() if k[0] != "pod"}
+        if chip_missing:
             sim = NetSim(
                 self.topo,
                 routing=self.base.routing,
                 latency_s=self.latency_s,
                 rx_gbs=self.rx_gbs,
             )
-            for (axis, shape), w in missing.items():
+            for (axis, shape), w in chip_missing.items():
                 mshape = "all_gather" if shape == "reduce_scatter" else shape
                 cal = sim.calibrated_profile(
                     self.size_bytes,
@@ -199,6 +234,34 @@ class NetsimPerfModel:
                     shapes=(mshape,),
                 )
                 # shapes netsim could not measure fall back to the analytic bw
+                _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
+                    axis, mshape, self.base.axes[axis].gbs_per_chip
+                )
+        if pod_missing:
+            from ..netsim.coarsen import (
+                coarse_calibrated_profile,
+                coarse_netsim,
+                coarsen_superpod,
+            )
+
+            cm = coarsen_superpod(self.superpod, level=self.coarsen_level)
+            csim = coarse_netsim(
+                cm,
+                routing=self.base.routing,
+                latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
+            )
+            for (axis, shape), w in pod_missing.items():
+                mshape = "all_gather" if shape == "reduce_scatter" else shape
+                cal = coarse_calibrated_profile(
+                    cm,
+                    self.size_bytes,
+                    comm=self.base,
+                    widths={} if w is None else {axis: w},
+                    axes=(axis,),
+                    shapes=(mshape,),
+                    sim=csim,
+                )
                 _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
                     axis, mshape, self.base.axes[axis].gbs_per_chip
                 )
@@ -241,6 +304,17 @@ class NetsimPerfModel:
         if "data" in self.base.axes and self.topo.ndim > 2:
             for shape in self.shapes:
                 widths[("data", shape)] = None  # full inter-rack plane
+        if self.superpod is not None and "pod" in self.base.axes:
+            # HRS pod tier, measured on the rack-coarsened mesh; the
+            # calibration ring spans the pod-axis group (spec-invariant:
+            # the DP-across-pods footprint is the axis itself), capped at
+            # the SuperPod's pod count
+            w = min(self.base.axes["pod"].size, self.superpod.n_pods)
+            for shape in self.shapes:
+                if shape in _POD_SHAPES:
+                    widths[("pod", shape)] = (
+                        None if w >= self.superpod.n_pods else w
+                    )
         return widths
 
     def calibration_profile(

@@ -27,7 +27,7 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass, field, replace
-from functools import lru_cache
+from functools import cached_property, lru_cache
 from typing import Iterator, Sequence
 
 import numpy as np
@@ -90,6 +90,17 @@ class DimSpec:
 # ---------------------------------------------------------------------------
 
 
+@lru_cache(maxsize=1 << 20)
+def _coords(shape: tuple[int, ...], node: int) -> tuple[int, ...]:
+    """Row-major node id -> coordinate tuple (memoized: id decoding is the
+    single hottest scalar call in netsim DAG compilation and routing)."""
+    out = []
+    for size in reversed(shape):
+        out.append(node % size)
+        node //= size
+    return tuple(reversed(out))
+
+
 @dataclass(frozen=True)
 class NDFullMesh:
     """An n-dimensional full-mesh of NPUs.
@@ -102,25 +113,23 @@ class NDFullMesh:
     dims: tuple[DimSpec, ...]
 
     # -- basic shape ------------------------------------------------------
+    # shape/num_nodes are cached per instance (frozen dataclass, so the
+    # dims never change): the netsim hot paths call them millions of times
     @property
     def ndim(self) -> int:
         return len(self.dims)
 
-    @property
+    @cached_property
     def shape(self) -> tuple[int, ...]:
         return tuple(d.size for d in self.dims)
 
-    @property
+    @cached_property
     def num_nodes(self) -> int:
         return int(np.prod(self.shape))
 
     # -- addressing (paper §4.1.2: structured addressing) -----------------
     def coords(self, node: int) -> tuple[int, ...]:
-        out = []
-        for size in reversed(self.shape):
-            out.append(node % size)
-            node //= size
-        return tuple(reversed(out))
+        return _coords(self.shape, node)
 
     def node_id(self, coords: Sequence[int]) -> int:
         nid = 0

@@ -13,7 +13,16 @@ Module map (paper section -> module):
 * ``flows``       — max-min fair-share fluid flows on the §3.1 nD-FullMesh
                     links, per-dim ``gbs_per_peer`` capacities (Table 3),
                     plus receiver-egress (incast) caps that serialize
-                    many-to-one bursts instead of resolving them instantly
+                    many-to-one bursts instead of resolving them instantly,
+                    per-dim IO caps for switched tiers, and aggregate flows
+                    carrying N symmetric ring-step members at once
+* ``solver``      — the max-min rate allocators: vectorized numpy
+                    water-filling over an incremental group CSR (default)
+                    and the pure-Python reference oracle
+* ``coarsen``     — rack/pod-coarsened SuperPod meshes (§3.3.4): racks
+                    become super-nodes with trunk-aggregated capacities and
+                    an IO-capped HRS dimension, so 4096-8192-chip multi-pod
+                    scenarios stay tractable
 * ``routing``     — APR adapter (§4.1): shortest / detour / borrow path
                     sets from ``core/apr.py`` as per-flow multi-path
                     splits; direct-notification fast recovery (§4.2)
@@ -38,6 +47,12 @@ Quick start::
 """
 
 from .api import NetSim, NetSimResult                      # noqa: F401
+from .coarsen import (                                     # noqa: F401
+    CoarseMesh,
+    coarse_calibrated_profile,
+    coarse_netsim,
+    coarsen_superpod,
+)
 from .collectives import (                                 # noqa: F401
     FlowDAG,
     FlowTask,

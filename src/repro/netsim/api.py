@@ -82,15 +82,31 @@ class NetSimResult:
 
 
 class _DagRun:
-    """Executes one FlowDAG on a Router with per-step latency."""
+    """Executes one FlowDAG on a Router with per-step latency.
 
-    def __init__(self, router: Router, dag: FlowDAG, latency_s: float):
+    Aggregate tasks (``task.pairs``) normally run as one weighted flow
+    (``FluidNetwork.add_aggregate_flow``); with ``aggregate=False`` — the
+    failure-injection path, where per-flow APR rerouting must stay live —
+    they are expanded into one routed send per pair and the task completes
+    when the last pair does.
+    """
+
+    def __init__(
+        self,
+        router: Router,
+        dag: FlowDAG,
+        latency_s: float,
+        *,
+        aggregate: bool = True,
+    ):
         self.router = router
         self.dag = dag
         self.latency_s = latency_s
+        self.aggregate = aggregate
         self.end_s: dict[int, float] = {}
         self.children: dict[int, list[int]] = {}
         self.indeg: dict[int, int] = {}
+        self.fanout: dict[int, int] = {}    # expanded aggregates: sends left
         for t in dag.tasks:
             self.indeg[t.tid] = len(t.deps)
             for d in t.deps:
@@ -108,6 +124,27 @@ class _DagRun:
 
     def _send(self, tid: int) -> None:
         task = self.dag.tasks[tid]
+        if task.pairs and self.aggregate:
+            self.router.net.add_aggregate_flow(
+                task.pairs,
+                task.size,
+                on_complete=lambda f, tid=tid: self._done(tid),
+                meta=("task", tid),
+            )
+            return
+        if task.pairs:
+            # expanded aggregate: per-pair routed sends, countdown to done
+            self.fanout[tid] = len(task.pairs)
+            for src, dst in task.pairs:
+                self.router.send(
+                    src,
+                    dst,
+                    task.size,
+                    on_complete=lambda tr, tid=tid: self._pair_done(tid),
+                    single_path=task.single_path,
+                    meta=("task", tid),
+                )
+            return
         self.router.send(
             task.src,
             task.dst,
@@ -116,6 +153,11 @@ class _DagRun:
             single_path=task.single_path,
             meta=("task", tid),
         )
+
+    def _pair_done(self, tid: int) -> None:
+        self.fanout[tid] -= 1
+        if self.fanout[tid] == 0:
+            self._done(tid)
 
     def _done(self, tid: int) -> None:
         self.end_s[tid] = self.router.net.engine.now
@@ -138,6 +180,10 @@ class NetSim:
         adaptive: bool = True,
         record_rates: bool = False,
         rx_gbs: float | str | None = "auto",
+        dim_io_gbs: dict[int, float] | None = None,
+        solver: str = "vectorized",
+        aggregate: bool = True,
+        axis_dims: dict[str, tuple[int, ...]] | None = None,
     ) -> None:
         self.topo = topo or ub_mesh_pod()
         self.routing = routing
@@ -151,6 +197,18 @@ class NetSim:
             self.rx_gbs: float | None = default_rx_gbs(self.topo)
         else:
             self.rx_gbs = rx_gbs
+        # per-dim per-node IO caps (switched tiers, see flows.dim_io_gbs)
+        self.dim_io_gbs = dim_io_gbs
+        # "vectorized" numpy water-filling (default) or the pure-Python
+        # "reference" oracle (netsim/solver.py)
+        self.solver = solver
+        # run multi-ring steps as aggregate flows; automatically expanded
+        # per pair on failure-injection runs (APR reroute needs per-flow
+        # paths)
+        self.aggregate = aggregate
+        # logical-axis -> topology-dims override (rack-coarsened meshes lay
+        # their axes out differently from the pod convention)
+        self.axis_dims = axis_dims
         self.last_network: FluidNetwork | None = None   # post-run inspection
 
     # -- plumbing ----------------------------------------------------------
@@ -160,6 +218,8 @@ class NetSim:
             EventEngine(),
             record_rates=self.record_rates,
             rx_gbs=self.rx_gbs,
+            dim_io_gbs=self.dim_io_gbs,
+            solver=self.solver,
         )
         return Router(
             net,
@@ -178,10 +238,16 @@ class NetSim:
         fail_at_s: float = 0.0,
         name: str | None = None,
     ) -> NetSimResult:
-        """Execute a flow DAG; optionally fail one physical link mid-run."""
+        """Execute a flow DAG; optionally fail one physical link mid-run.
+
+        Aggregate ring-step tasks run as single weighted flows unless a
+        failure is injected (or the NetSim was built with
+        ``aggregate=False``), in which case they expand into per-pair
+        routed sends so APR rerouting stays per-flow."""
         router = self._fresh()
         net = router.net
-        run = _DagRun(router, dag, self.latency_s)
+        use_agg = self.aggregate and fail_link is None
+        run = _DagRun(router, dag, self.latency_s, aggregate=use_agg)
         fail_stats: dict = {}
         if fail_link is not None:
             u, v = fail_link
@@ -199,7 +265,7 @@ class NetSim:
             link_utilization=net.utilization(makespan or None),
             # transfer-level: a re-split withdraws flows mid-stream, so the
             # flow ledger undercounts; completed tasks are the ground truth
-            bytes_delivered=sum(dag.tasks[tid].size for tid in run.end_s),
+            bytes_delivered=sum(dag.tasks[tid].total_bytes for tid in run.end_s),
             events=net.engine.events_fired,
             incomplete=len(dag.tasks) - len(run.end_s),
         )
@@ -355,12 +421,16 @@ class NetSim:
     def _axis_dims_map(
         self, axes: tuple[str, ...] | None
     ) -> dict[str, tuple[int, ...]]:
-        """Axis -> topology dims, the structural convention: dims (0, 1)
-        are the intra-rack "model" domain, the rest the inter-rack "data"
-        domain."""
-        axis_dims = {"model": (0, 1)}
-        if self.topo.ndim > 2:
-            axis_dims["data"] = tuple(range(2, self.topo.ndim))
+        """Axis -> topology dims.  Default structural convention: dims
+        (0, 1) are the intra-rack "model" domain, the rest the inter-rack
+        "data" domain; a rack-coarsened mesh overrides the layout via the
+        constructor's ``axis_dims``."""
+        if self.axis_dims is not None:
+            axis_dims = dict(self.axis_dims)
+        else:
+            axis_dims = {"model": (0, 1)}
+            if self.topo.ndim > 2:
+                axis_dims["data"] = tuple(range(2, self.topo.ndim))
         if axes is not None:
             axis_dims = {k: v for k, v in axis_dims.items() if k in axes}
         return axis_dims

@@ -1,0 +1,183 @@
+"""Rack-coarsened SuperPod topologies for multi-pod netsim runs.
+
+A 8192-chip SuperPod is far beyond flow-level simulation at chip
+granularity (a single 1024-chip pod already compiles ~60k-task ring DAGs).
+The cross-pod questions the planner asks — how fast is a DP AllReduce over
+the HRS Clos tier, how much does inter-rack contention cost at multi-pod
+scale — do not depend on intra-rack detail, so this module coarsens the
+topology the way RailX-style hyper-scale studies do: **racks (or whole
+pods) become super-nodes**, with link capacities aggregated from
+``core/topology.SuperPod``:
+
+* the inter-rack full-mesh dims (Z, A) keep their clique structure, one
+  super-link per rack pair carrying the whole trunk
+  (``chips_per_rack x lanes_per_peer`` — exactly the paper's Fig. 8-(d)
+  LRS trunk aggregation);
+* the pod-level HRS Clos tier becomes one extra "P" dimension.  A
+  non-blocking switch tier is NOT a mesh: any single rack pair may burst
+  the full ``uplink_lanes_per_rack`` bandwidth, while each rack's
+  *aggregate* injection/ejection into the tier is bounded by that same
+  uplink.  The coarse mesh therefore gives the P dimension full-uplink
+  per-peer capacity plus a per-node IO cap (``FluidNetwork.dim_io_gbs``)
+  of one uplink per direction.
+
+What coarsening loses, by construction: intra-rack (X, Y) contention and
+incast detail — every rack is a perfect fluid source/sink.  Calibrations
+of the intra-rack "model" axis must keep running on the chip-level pod
+topology; the coarse mesh is for the "data"/"pod" axes
+(``core.perf_model.NetsimPerfModel`` composes both automatically when
+given a ``superpod=``).
+
+``coarse_calibrated_profile`` converts between chip units and super-node
+units: a rack aggregates ``chips_per_node`` chips' payloads (64 DP groups
+of S bytes each behave like one allreduce of 64*S at rack granularity),
+so it measures with ``per_chip_bytes * chips_per_node`` and divides the
+resulting bandwidth back down to per-chip GB/s — the units ``CommModel``
+carries.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.cost_model import COLLECTIVE_SHAPES, CalibrationProfile, Routing
+from ..core.topology import (
+    DimSpec,
+    NDFullMesh,
+    OPTICAL_1KM,
+    SuperPod,
+)
+
+COARSEN_LEVELS = ("rack", "pod")
+
+
+@dataclass(frozen=True)
+class CoarseMesh:
+    """A coarsened SuperPod: super-node topology + unit conversions.
+
+    ``axis_dims`` maps the logical calibration axes onto the coarse dims
+    (the coarse layout differs from the chip-level pod convention), and
+    ``dim_io_gbs`` carries the per-super-node IO caps of the switched
+    (HRS) dims — hand both to ``NetSim`` / ``FluidNetwork``.
+    """
+
+    topo: NDFullMesh
+    chips_per_node: int
+    axis_dims: dict[str, tuple[int, ...]]
+    dim_io_gbs: dict[int, float] = field(default_factory=dict)
+    level: str = "rack"
+
+    @property
+    def num_chips(self) -> int:
+        return self.topo.num_nodes * self.chips_per_node
+
+
+def coarsen_superpod(sp: SuperPod, *, level: str = "rack") -> CoarseMesh:
+    """Coarsen ``sp`` to rack- or pod-granularity super-nodes.
+
+    * ``"rack"`` — nodes are racks, dims = the pod's inter-rack dims with
+      trunk-aggregated capacities plus the HRS "P" dimension (IO-capped).
+    * ``"pod"`` — nodes are whole pods, a single HRS "P" dimension whose
+      per-node IO cap is the pod's aggregate uplink.
+    """
+    if level not in COARSEN_LEVELS:
+        raise ValueError(f"unknown coarsening level {level!r}; pick from {COARSEN_LEVELS}")
+    pod = sp.pod
+    uplink_gbs = sp.uplink_lanes_per_rack * OPTICAL_1KM.gbps_per_lane
+    if level == "pod":
+        pod_uplink = uplink_gbs * sp.racks_per_pod
+        topo = NDFullMesh(
+            dims=(
+                DimSpec("P", sp.n_pods, OPTICAL_1KM, sp.uplink_lanes_per_rack * sp.racks_per_pod),
+            )
+        )
+        return CoarseMesh(
+            topo=topo,
+            chips_per_node=pod.num_nodes,
+            axis_dims={"pod": (0,)},
+            dim_io_gbs={0: pod_uplink},
+            level=level,
+        )
+    if pod.ndim <= 2:
+        raise ValueError("rack-level coarsening needs a pod with inter-rack dims")
+    chips_per_rack = pod.shape[0] * pod.shape[1]
+    dims: list[DimSpec] = []
+    for d in pod.dims[2:]:
+        # one super-link per rack pair = the aggregated trunk of all
+        # chips_per_rack point-to-point allocations (Fig. 8-(d))
+        dims.append(
+            DimSpec(d.name, d.size, d.link, d.lanes_per_peer * chips_per_rack)
+        )
+    axis_dims: dict[str, tuple[int, ...]] = {
+        "data": tuple(range(len(dims)))
+    }
+    dim_io: dict[int, float] = {}
+    if sp.n_pods > 1:
+        hrs_dim = len(dims)
+        # non-blocking Clos: full uplink per peer PAIR, one uplink of
+        # aggregate IO per rack (the dim_io cap)
+        dims.append(DimSpec("P", sp.n_pods, OPTICAL_1KM, sp.uplink_lanes_per_rack))
+        axis_dims["pod"] = (hrs_dim,)
+        dim_io[hrs_dim] = uplink_gbs
+    return CoarseMesh(
+        topo=NDFullMesh(dims=tuple(dims)),
+        chips_per_node=chips_per_rack,
+        axis_dims=axis_dims,
+        dim_io_gbs=dim_io,
+        level=level,
+    )
+
+
+def coarse_netsim(
+    cm: CoarseMesh,
+    *,
+    routing: Routing = Routing.DETOUR,
+    latency_s: float = 5e-6,
+    rx_gbs: "float | str | None" = "auto",
+    solver: str = "vectorized",
+    **kw,
+):
+    """A ``NetSim`` over the coarse topology with the coarse axis layout
+    and the HRS IO caps pre-wired."""
+    from .api import NetSim  # deferred: avoid import cycle at package init
+
+    return NetSim(
+        cm.topo,
+        routing=routing,
+        latency_s=latency_s,
+        rx_gbs=rx_gbs,
+        solver=solver,
+        axis_dims=cm.axis_dims,
+        dim_io_gbs=cm.dim_io_gbs or None,
+        **kw,
+    )
+
+
+def coarse_calibrated_profile(
+    cm: CoarseMesh,
+    per_chip_bytes: float = 64e6,
+    *,
+    comm=None,
+    axis_sizes: dict[str, int] | None = None,
+    widths: dict | None = None,
+    axes: tuple[str, ...] | None = None,
+    shapes: tuple[str, ...] = COLLECTIVE_SHAPES,
+    sim=None,
+    **netsim_kw,
+) -> CalibrationProfile:
+    """Per-chip effective GB/s per (axis, shape), measured at super-node
+    granularity: payloads are scaled up by ``chips_per_node`` (a rack
+    carries its chips' aggregate collective traffic) and the measured
+    bandwidth scaled back down to per-chip units."""
+    sim = sim or coarse_netsim(cm, **netsim_kw)
+    prof = sim.calibrated_profile(
+        per_chip_bytes * cm.chips_per_node,
+        comm=comm,
+        axis_sizes=axis_sizes,
+        widths=widths,
+        axes=axes,
+        shapes=shapes,
+    )
+    return CalibrationProfile(
+        gbs={k: g / cm.chips_per_node for k, g in prof.gbs.items()}
+    )

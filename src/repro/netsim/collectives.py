@@ -53,15 +53,36 @@ Ring = tuple[int, ...]
 
 @dataclass(frozen=True)
 class FlowTask:
-    """One point-to-point message inside a collective schedule."""
+    """One point-to-point message inside a collective schedule — or, when
+    ``pairs`` is set, one *aggregate* of symmetric adjacent-pair sends
+    (the parallel positions of one multi-ring step): ``size`` is then the
+    per-pair byte count and ``src``/``dst`` name the representative first
+    pair.  Aggregates execute as a single weighted flow
+    (``FluidNetwork.add_aggregate_flow``) unless the run expands them
+    (failure injection / parity checks)."""
 
     tid: int
     src: int
     dst: int
-    size: float                       # bytes
+    size: float                       # bytes (per pair, for aggregates)
     deps: tuple[int, ...] = ()
     single_path: bool = False         # ring steps pin their direct link
     tag: str = ""
+    pairs: tuple[tuple[int, int], ...] = ()   # () = plain point-to-point
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.pairs) or 1
+
+    @property
+    def total_bytes(self) -> float:
+        return self.size * self.n_flows
+
+    def endpoints(self) -> set[int]:
+        """All nodes this task touches (aggregate-aware)."""
+        if self.pairs:
+            return {n for p in self.pairs for n in p}
+        return {self.src, self.dst}
 
 
 @dataclass
@@ -78,7 +99,7 @@ class FlowDAG:
 
     @property
     def total_bytes(self) -> float:
-        return sum(t.size for t in self.tasks)
+        return sum(t.total_bytes for t in self.tasks)
 
     def frontier(self) -> tuple[int, ...]:
         """Tasks no other task depends on (the DAG's exit set)."""
@@ -119,39 +140,46 @@ def _ring_steps(
     deps0: tuple[int, ...],
     tag: str,
 ) -> None:
-    """Unroll ``n_steps`` pipeline steps of every ring.
+    """Unroll ``n_steps`` pipeline steps of every ring, ONE aggregate task
+    per (ring, step).
 
-    Task (s, i) = position i's send at step s.  Deps: the data dep
-    (s-1, i-1) — the chunk forwarded at step s arrived at step s-1 — and
-    the port dep (s-1, i) — each node serializes its own injections (this
-    keeps dep-less chain heads from bursting all their steps at once).
+    All positions of one ring step are symmetric — same chunk size, one
+    flow per edge-disjoint ring link — so they start together, drain at
+    the same max-min rate, and finish together.  The aggregate task
+    carries every position's (sender, receiver) pair and depends only on
+    the previous step's aggregate, which subsumes the per-position data
+    dep (the chunk forwarded at step s arrived at step s-1) and port dep
+    (each node serializes its own injections).  This collapses a clique
+    collective from O(rings * steps * positions) tasks to
+    O(rings * steps) while reproducing the per-position schedule's
+    completion times exactly (the parity suite pins aggregate vs expanded
+    runs against each other).
+
+    Known coarsening of the DAG itself: under failure injection the run
+    expands aggregates into per-pair sends but keeps the per-step barrier
+    dep, so a slow rerouted pair stalls its whole ring step instead of
+    propagating diagonally as the PR-3 per-position deps did — a slightly
+    pessimistic recovery model (the ``netsim_failure`` benchmark guards
+    it stays within sane bounds).
     """
     for r, ring in enumerate(rings):
         m = len(ring)
-        prev: dict[int, int] = {}       # sender position -> step-(s-1) tid
+        prev: tuple[int, ...] = ()      # previous step's aggregate tid
         for s in range(n_steps):
-            cur: dict[int, int] = {}
             senders = range(m) if closed else range(m - 1)
-            for i in senders:
-                j = (i + 1) % m
-                if s == 0:
-                    deps = deps0
-                else:
-                    deps = tuple(
-                        prev[k]
-                        for k in ((i - 1) % m if closed else i - 1, i)
-                        if k in prev
-                    )
-                t = dag._add(
-                    src=nodes[ring[i]],
-                    dst=nodes[ring[j]],
-                    size=chunk,
-                    deps=deps,
-                    single_path=True,
-                    tag=f"{tag}/r{r}s{s}",
-                )
-                cur[i] = t.tid
-            prev = cur
+            pairs = tuple(
+                (nodes[ring[i]], nodes[ring[(i + 1) % m]]) for i in senders
+            )
+            t = dag._add(
+                src=pairs[0][0],
+                dst=pairs[0][1],
+                size=chunk,
+                deps=deps0 if s == 0 else prev,
+                single_path=True,
+                tag=f"{tag}/r{r}s{s}",
+                pairs=pairs,
+            )
+            prev = (t.tid,)
 
 
 def _ring_collective(

@@ -13,6 +13,20 @@ The link inventory comes straight from ``core/topology.NDFullMesh``: every
 ``dims[dim].gbs_per_peer``.  Extra links (e.g. the Borrow strategy's
 switch-plane uplinks) can be added on top.
 
+The rate allocator itself lives in ``netsim/solver.py``: the default
+``"vectorized"`` numpy water-filling (incremental group CSR, symmetric
+flows aggregated by identical constraint multisets) or the original
+``"reference"`` pure-Python progressive filling kept as the parity oracle.
+
+**Aggregate flows** (:meth:`FluidNetwork.add_aggregate_flow`): the N
+parallel sends of one multi-ring step are symmetric — same size, same
+per-link contention — so they are carried as ONE flow whose link set is
+the union of the member links and whose ``multiplicity`` counts the
+members.  The max-min solver naturally gives such a flow the min fair
+share across its links, which under symmetry equals every member's
+individual rate — collapsing the dominant collective DAGs from O(N)
+flows per step to O(rings) while reproducing the exact completion times.
+
 **Receiver-egress (incast) contention**: fluid max-min over per-link
 capacities alone resolves many-to-one bursts instantaneously — N senders on
 N distinct full-mesh links all drain at full link rate, so the receiver
@@ -26,6 +40,16 @@ largest single-dimension clique allocation — wide enough that multi-ring
 collectives (≤ one inbound flow per ring per node) keep their full
 bandwidth, tight enough that cross-dimension incast serializes.
 
+**Per-dimension IO caps** (``dim_io_gbs``): a dimension whose "links" are
+really a non-blocking switch tier (the SuperPod's HRS pod-level Clos,
+§3.3.4) is constrained per NODE, not per peer-pair — each rack's uplink
+bundle bounds its aggregate injection AND ejection into that tier while
+any single pair may burst the full uplink.  ``dim_io_gbs={dim: gbs}``
+adds one virtual TX and one virtual RX link per node per capped
+dimension, shared by every flow whose path crosses that dimension at that
+node.  ``netsim/coarsen.py`` uses this to model the HRS tier of the
+rack-coarsened SuperPod.
+
 Invariants maintained (and unit-tested):
 * sum of flow rates on a link never exceeds its capacity,
 * bytes delivered per flow equals the requested flow size,
@@ -36,10 +60,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Hashable
 
 from ..core.topology import NDFullMesh
 from .events import Event, EventEngine
+from .solver import make_solver
 
 DirectedLink = tuple[int, int]          # (u, v), u -> v
 
@@ -49,6 +74,8 @@ _EPS_RATE = 1e-12
 RX_PORT = -1                            # sentinel endpoint of virtual ingress
                                         # links: (RX_PORT, node) caps the
                                         # receiver-egress bandwidth of `node`
+IO_TX = -2                              # (IO_TX, dim, node): per-dim injection
+IO_RX = -3                              # (IO_RX, dim, node): per-dim ejection
 
 
 def default_rx_gbs(topo: NDFullMesh) -> float:
@@ -63,21 +90,26 @@ def default_rx_gbs(topo: NDFullMesh) -> float:
     return max(d.gbs_total for d in topo.dims)
 
 
-@dataclass
+@dataclass(slots=True)
 class Flow:
-    """One fluid flow on one explicit path."""
+    """One fluid flow — a single explicit path, or an aggregate of
+    ``multiplicity`` symmetric single-hop members (``links`` then holds one
+    directed link per member and ``size``/``remaining``/``rate`` are
+    per-member)."""
 
     fid: int
     path: tuple[int, ...]
-    size: float                          # bytes requested
-    remaining: float                     # bytes left to send
+    size: float                          # bytes requested (per member)
+    remaining: float                     # bytes left to send (per member)
     on_complete: Callable[["Flow"], None] | None = None
     meta: object = None                  # opaque owner handle (Transfer, task)
     rate: float = 0.0                    # bytes/s, set by the allocator
     start_s: float = 0.0
     end_s: float | None = None
-    links: tuple[DirectedLink, ...] = ()   # consecutive path pairs, cached
-    constraints: tuple[DirectedLink, ...] = ()  # links + virtual rx link
+    multiplicity: int = 1                # symmetric members carried
+    credited: float = 0.0                # bytes already added to link ledger
+    links: tuple[DirectedLink, ...] = ()   # wire links (member links if agg)
+    constraints: tuple[Hashable, ...] = ()  # links + virtual rx/io links
 
     def __post_init__(self) -> None:
         self.links = tuple(zip(self.path, self.path[1:]))
@@ -86,6 +118,10 @@ class Flow:
     @property
     def done(self) -> bool:
         return self.remaining <= _EPS_BYTES
+
+    @property
+    def total_bytes(self) -> float:
+        return self.size * self.multiplicity
 
 
 class FluidNetwork:
@@ -98,14 +134,19 @@ class FluidNetwork:
         *,
         record_rates: bool = False,
         rx_gbs: float | dict[int, float] | None = None,
+        dim_io_gbs: dict[int, float] | None = None,
+        solver: str = "vectorized",
     ) -> None:
         self.topo = topo
         self.engine = engine or EventEngine()
         self.capacity: dict[DirectedLink, float] = {}    # bytes/s
+        self._link_dim: dict[DirectedLink, int] = {}     # wire link -> dim
         for u, v, d in topo.links():
             gbs = topo.dims[d].gbs_per_peer * 1e9
             self.capacity[(u, v)] = gbs
             self.capacity[(v, u)] = gbs
+            self._link_dim[(u, v)] = d
+            self._link_dim[(v, u)] = d
         # receiver-egress caps, bytes/s per node (empty = unconstrained)
         if rx_gbs is None:
             self.rx_cap: dict[int, float] = {}
@@ -113,6 +154,10 @@ class FluidNetwork:
             self.rx_cap = {n: g * 1e9 for n, g in rx_gbs.items()}
         else:
             self.rx_cap = {n: rx_gbs * 1e9 for n in range(topo.num_nodes)}
+        # per-dimension per-node IO caps (switched tiers), bytes/s
+        self.dim_io_cap: dict[int, float] = {
+            d: g * 1e9 for d, g in (dim_io_gbs or {}).items()
+        }
         self.failed: set[DirectedLink] = set()
         self.flows: dict[int, Flow] = {}                 # active flows
         self.completed: dict[int, Flow] = {}
@@ -122,9 +167,11 @@ class FluidNetwork:
         self._flush_ev: Event | None = None
         self._dirty = False
         self._in_completion = False
-        self.link_bytes: dict[DirectedLink, float] = {}  # delivered per link
+        self._flowing: list[Flow] = []                   # rate > 0 after solve
+        self._link_bytes: dict[DirectedLink, float] = {}  # credited per link
         self.record_rates = record_rates
         self.rate_log: list[tuple[float, DirectedLink, float, float]] = []
+        self.solver = make_solver(solver, self)
 
     # -- topology edits ----------------------------------------------------
     def add_link(self, u: int, v: int, gbs: float, *, duplex: bool = True) -> None:
@@ -132,11 +179,13 @@ class FluidNetwork:
         self.capacity[(u, v)] = gbs * 1e9
         if duplex:
             self.capacity[(v, u)] = gbs * 1e9
+        self.solver.capacity_changed()
 
     def fail_link(self, u: int, v: int) -> list[Flow]:
         """Zero both directions of u-v; returns the flows that crossed it."""
         self._advance()
         self.failed |= {(u, v), (v, u)}
+        self.solver.capacity_changed()
         hit = [
             f for f in self.flows.values()
             if (u, v) in f.links or (v, u) in f.links
@@ -149,6 +198,32 @@ class FluidNetwork:
 
     def effective_capacity(self, link: DirectedLink) -> float:
         return 0.0 if link in self.failed else self.capacity.get(link, 0.0)
+
+    def constraint_capacity(self, key: Hashable) -> float:
+        """Capacity (bytes/s) of any constraint key a flow may carry: a
+        wire link, a virtual receiver-egress port, or a per-dim IO port."""
+        k0 = key[0]
+        if k0 == RX_PORT:
+            return self.rx_cap[key[1]]
+        if k0 == IO_TX or k0 == IO_RX:
+            return self.dim_io_cap[key[1]]
+        return self.effective_capacity(key)
+
+    def _constraints_for(
+        self, links: tuple[DirectedLink, ...], dsts: tuple[int, ...]
+    ) -> tuple[Hashable, ...]:
+        """Wire links + the virtual rx / per-dim IO ports they imply."""
+        extra: list[Hashable] = []
+        for dst in dsts:
+            if dst in self.rx_cap:
+                extra.append((RX_PORT, dst))
+        if self.dim_io_cap:
+            for (u, v) in links:
+                d = self._link_dim.get((u, v))
+                if d in self.dim_io_cap:
+                    extra.append((IO_TX, d, u))
+                    extra.append((IO_RX, d, v))
+        return links + tuple(extra) if extra else links
 
     # -- flow lifecycle ----------------------------------------------------
     def add_flow(
@@ -172,9 +247,7 @@ class FluidNetwork:
         for l in flow.links:
             if l not in self.capacity:
                 raise ValueError(f"path {path} uses nonexistent link {l}")
-        dst = flow.path[-1]
-        if dst in self.rx_cap:
-            flow.constraints = flow.links + ((RX_PORT, dst),)
+        flow.constraints = self._constraints_for(flow.links, (flow.path[-1],))
         if len(path) < 2 or size <= _EPS_BYTES:
             # degenerate: local copy, completes instantly
             flow.remaining = 0.0
@@ -185,86 +258,112 @@ class FluidNetwork:
             return flow
         self._advance()
         self.flows[fid] = flow
+        self.solver.flow_added(flow)
+        self._mark_dirty()
+        return flow
+
+    def add_aggregate_flow(
+        self,
+        pairs: tuple[DirectedLink, ...],
+        size: float,
+        on_complete: Callable[[Flow], None] | None = None,
+        meta: object = None,
+    ) -> Flow:
+        """One weighted flow carrying ``len(pairs)`` symmetric single-hop
+        members of ``size`` bytes each (e.g. the parallel sends of one
+        multi-ring step).  Every member link constrains the shared rate, so
+        the aggregate completes exactly when its slowest member would —
+        identical to the member-by-member run whenever the members are
+        symmetric, ~N x cheaper to simulate."""
+        fid = self._next_fid
+        self._next_fid += 1
+        flow = Flow(
+            fid=fid,
+            path=tuple(pairs[0]),
+            size=float(size),
+            remaining=float(size),
+            on_complete=on_complete,
+            meta=meta,
+            start_s=self.engine.now,
+            multiplicity=len(pairs),
+        )
+        for l in pairs:
+            if l not in self.capacity:
+                raise ValueError(f"aggregate flow uses nonexistent link {l}")
+        flow.links = tuple(pairs)
+        flow.constraints = self._constraints_for(
+            flow.links, tuple(v for _u, v in pairs)
+        )
+        if size <= _EPS_BYTES:
+            flow.remaining = 0.0
+            flow.end_s = self.engine.now
+            self.completed[fid] = flow
+            if on_complete:
+                on_complete(flow)
+            return flow
+        self._advance()
+        self.flows[fid] = flow
+        self.solver.flow_added(flow)
         self._mark_dirty()
         return flow
 
     def remove_flow(self, flow: Flow) -> float:
         """Withdraw an active flow; returns its un-sent bytes."""
         self._advance()
-        self.flows.pop(flow.fid, None)
+        if self.flows.pop(flow.fid, None) is not None:
+            self._credit(flow)
+            self.solver.flow_removed(flow)
         self._mark_dirty()
         return max(0.0, flow.remaining)
 
     # -- fluid mechanics ---------------------------------------------------
     def _advance(self) -> None:
-        """Accrue bytes sent at current rates since the last state change."""
+        """Accrue bytes sent at current rates since the last state change.
+
+        Only flows the last solve left with a positive rate are walked,
+        and the per-link byte ledger is NOT touched here — progress is
+        credited lazily per flow on completion/withdrawal (or when the
+        ledger is read), so the hot path is one subtraction per flowing
+        flow per completion wave.
+        """
         now = self.engine.now
         dt = now - self._last_update
         self._last_update = now
         if dt <= 0:
             return
+        for f in self._flowing:
+            moved = f.rate * dt
+            f.remaining = f.remaining - moved if moved < f.remaining else 0.0
+
+    def _credit(self, flow: Flow) -> None:
+        """Post a flow's un-credited progress to the per-link byte ledger
+        (one entry per wire-link occurrence; aggregate members credit their
+        own link)."""
+        delta = (flow.size - max(0.0, flow.remaining)) - flow.credited
+        if delta <= 0:
+            return
+        flow.credited += delta
+        lb = self._link_bytes
+        for l in flow.links:
+            lb[l] = lb.get(l, 0.0) + delta
+
+    @property
+    def link_bytes(self) -> dict[DirectedLink, float]:
+        """Bytes delivered per directed link, including in-flight progress
+        (flushes the lazy ledger on access)."""
+        self._advance()
         for f in self.flows.values():
-            if f.rate > _EPS_RATE:
-                moved = min(f.remaining, f.rate * dt)
-                f.remaining -= moved
-                for l in f.links:
-                    self.link_bytes[l] = self.link_bytes.get(l, 0.0) + moved
+            self._credit(f)
+        return self._link_bytes
 
     def _maxmin_rates(self) -> None:
-        """Progressive filling: saturate the tightest link level-by-level.
-
-        All links at the current minimum fair share freeze together (one
-        water-filling level per round), which collapses the symmetric
-        collective case — every ring link equally loaded — to one round.
-        A flow's constraint set is its wire links plus (when ``rx_cap`` is
-        configured) the virtual ``(RX_PORT, dst)`` ingress link shared by
-        every flow terminating at ``dst`` — incast serializes there.
-        """
-        active = [self.flows[k] for k in sorted(self.flows)]
-        for f in active:
-            f.rate = 0.0
-        residual: dict[DirectedLink, float] = {}
-        count: dict[DirectedLink, int] = {}
-        flows_on: dict[DirectedLink, list[Flow]] = {}
-        for f in active:
-            for l in f.constraints:
-                if l not in residual:
-                    residual[l] = (
-                        self.rx_cap[l[1]]
-                        if l[0] == RX_PORT
-                        else self.effective_capacity(l)
-                    )
-                    count[l] = 0
-                    flows_on[l] = []
-                count[l] += 1
-                flows_on[l].append(f)
-        frozen: set[int] = set()
-        n_left = len(active)
-        while n_left > 0:
-            best = math.inf
-            for l, c in count.items():
-                if c > 0:
-                    share = residual[l] / c
-                    if share < best:
-                        best = share
-            if not math.isfinite(best):
-                break
-            level = best * (1 + 1e-12) + 1e-9
-            for l in list(count):
-                if count[l] <= 0 or residual[l] / count[l] > level:
-                    continue
-                for f in flows_on[l]:
-                    if f.fid in frozen:
-                        continue
-                    f.rate = best
-                    frozen.add(f.fid)
-                    n_left -= 1
-                    for fl in f.constraints:
-                        residual[fl] = max(0.0, residual[fl] - best)
-                        count[fl] -= 1
+        """Delegate the progressive-filling allocation to the configured
+        solver (``netsim/solver.py``); remembers the flowing set so
+        ``_advance`` can skip zero-rate flows up front."""
+        self._flowing = self.solver.solve()
         if self.record_rates:
             used: dict[DirectedLink, float] = {}
-            for f in active:
+            for f in self._flowing:
                 for l in f.links:
                     used[l] = used.get(l, 0.0) + f.rate
             for l in sorted(used):
@@ -297,9 +396,10 @@ class FluidNetwork:
             self._completion_ev.cancel()
             self._completion_ev = None
         ttc = math.inf
-        for f in self.flows.values():
-            if f.rate > _EPS_RATE:
-                ttc = min(ttc, f.remaining / f.rate)
+        for f in self._flowing:
+            t = f.remaining / f.rate
+            if t < ttc:
+                ttc = t
         if math.isfinite(ttc):
             self._completion_ev = self.engine.schedule(
                 max(0.0, ttc), self._on_completion
@@ -308,12 +408,14 @@ class FluidNetwork:
     def _on_completion(self) -> None:
         self._completion_ev = None
         self._advance()
-        done = [self.flows[k] for k in sorted(self.flows) if self.flows[k].done]
+        done = [f for f in self.flows.values() if f.done]
         self._in_completion = True
         try:
             for f in done:
                 del self.flows[f.fid]
                 f.remaining = 0.0
+                self._credit(f)
+                self.solver.flow_removed(f)
                 f.end_s = self.engine.now
                 self.completed[f.fid] = f
             for f in done:
@@ -330,14 +432,12 @@ class FluidNetwork:
     def utilization(self, elapsed_s: float | None = None) -> dict[DirectedLink, float]:
         """Per-link mean utilization over ``elapsed_s`` (default: now)."""
         t = elapsed_s if elapsed_s is not None else self.engine.now
+        lb = self.link_bytes
         if t <= 0:
-            return {l: 0.0 for l in self.link_bytes}
-        return {
-            l: b / (self.capacity[l] * t)
-            for l, b in sorted(self.link_bytes.items())
-        }
+            return {l: 0.0 for l in lb}
+        return {l: b / (self.capacity[l] * t) for l, b in sorted(lb.items())}
 
     @property
     def bytes_delivered(self) -> float:
         """Total bytes delivered end-to-end (per-flow, not per-link)."""
-        return sum(f.size for f in self.completed.values())
+        return sum(f.total_bytes for f in self.completed.values())

@@ -81,6 +81,11 @@ class Router:
         self.adaptive = adaptive
         self.transfers: dict[int, Transfer] = {}
         self._next_tid = 0
+        # APR path sets are pure functions of (src, dst, policy) while the
+        # failed-link set is unchanged; memoizing them removes the dominant
+        # per-send cost of large collective DAG runs (invalidated by
+        # ``fail_link``)
+        self._path_cache: dict[tuple[int, int, bool], list[Path]] = {}
         self.switch_node: int | None = None
         if policy == Routing.BORROW:
             # virtual switch plane: one hop up, one hop down, per-NPU uplink
@@ -94,7 +99,17 @@ class Router:
 
     def candidate_paths(self, src: int, dst: int, *, single: bool = False) -> list[Path]:
         """APR path set for (src, dst) under the active policy, skipping
-        failed links.  ``single`` pins one path (ring-schedule steps)."""
+        failed links.  ``single`` pins one path (ring-schedule steps).
+        Memoized per (src, dst, single) until a link fails."""
+        key = (src, dst, single)
+        cached = self._path_cache.get(key)
+        if cached is not None:
+            return cached
+        paths = self._candidate_paths(src, dst, single)
+        self._path_cache[key] = paths
+        return paths
+
+    def _candidate_paths(self, src: int, dst: int, single: bool) -> list[Path]:
         if src == dst:
             return [(src,)]
         sp = [p for p in shortest_paths(self.topo, src, dst) if self._alive(p)]
@@ -266,6 +281,7 @@ class Router:
 
         Returns {affected_transfers, notified_sources, max_notify_hops}.
         """
+        self._path_cache.clear()
         hit_flows = self.net.fail_link(u, v)
         hit: dict[int, Transfer] = {}
         for f in hit_flows:

@@ -1,0 +1,154 @@
+"""Rack-coarsened SuperPod calibration (netsim/coarsen.py).
+
+Contracts:
+* the coarse mesh's aggregate capacities follow from SuperPod geometry
+  (trunked inter-rack cliques, one HRS uplink of IO per rack),
+* coarse-measured cross-pod DP bandwidth lands within 20% of the analytic
+  DCN ("pod" axis) model on an uncontended config — the acceptance bar —
+  and coarse-measured inter-rack ("data") bandwidth within a few % of the
+  exact chip-level pod measurement,
+* ``NetsimPerfModel(superpod=...)`` prices the pod axis on the coarse
+  measurement (memo key carries the coarsening level) and a 4-pod
+  4096-chip ``plan()`` stays fast.
+"""
+
+import time
+from dataclasses import replace
+
+import pytest
+
+from repro.core.cost_model import Routing, build_comm_model
+from repro.core.perf_model import NetsimPerfModel
+from repro.core.topology import SuperPod, ub_mesh_pod
+from repro.netsim import NetSim
+from repro.netsim.coarsen import (
+    coarse_calibrated_profile,
+    coarse_netsim,
+    coarsen_superpod,
+)
+
+
+@pytest.fixture(scope="module")
+def superpod4() -> SuperPod:
+    return SuperPod(pod=ub_mesh_pod(), n_pods=4)
+
+
+class TestCoarseMesh:
+    def test_rack_level_geometry(self, superpod4):
+        cm = coarsen_superpod(superpod4)
+        pod = superpod4.pod
+        assert cm.topo.shape == (pod.shape[2], pod.shape[3], 4)
+        assert cm.chips_per_node == pod.shape[0] * pod.shape[1]
+        assert cm.num_chips == superpod4.num_nodes == 4096
+        # trunk aggregation: 64 chips x 2 lanes x 6.25 GB/s = 800 per peer
+        assert cm.topo.dims[0].gbs_per_peer == pytest.approx(
+            cm.chips_per_node * pod.dims[2].gbs_per_peer
+        )
+        # the HRS dim carries the full uplink per pair, capped per rack
+        uplink = superpod4.uplink_lanes_per_rack * 6.25
+        assert cm.topo.dims[2].gbs_per_peer == pytest.approx(uplink)
+        assert cm.dim_io_gbs == {2: pytest.approx(uplink)}
+        assert cm.axis_dims == {"data": (0, 1), "pod": (2,)}
+
+    def test_pod_level_geometry(self, superpod4):
+        cm = coarsen_superpod(superpod4, level="pod")
+        assert cm.topo.shape == (4,)
+        assert cm.chips_per_node == superpod4.pod.num_nodes
+        assert cm.axis_dims == {"pod": (0,)}
+
+    def test_unknown_level_rejected(self, superpod4):
+        with pytest.raises(ValueError):
+            coarsen_superpod(superpod4, level="board")
+
+    def test_single_pod_has_no_hrs_dim(self):
+        cm = coarsen_superpod(SuperPod(pod=ub_mesh_pod(), n_pods=1))
+        assert "pod" not in cm.axis_dims
+        assert cm.dim_io_gbs == {}
+
+
+class TestCoarseAccuracy:
+    def test_cross_pod_dp_bw_within_20pct_of_analytic(self, superpod4):
+        # uncontended cross-pod DP: the HRS tier is a non-blocking Clos,
+        # so the measured AllReduce bandwidth must track the analytic
+        # uplink allocation (25 GB/s per chip) within the 20% bar
+        comm = build_comm_model(multi_pod=True, routing=Routing.DETOUR)
+        cm = coarsen_superpod(superpod4)
+        prof = coarse_calibrated_profile(
+            cm, 64e6, axis_sizes={"pod": 4}, axes=("pod",),
+            shapes=("allreduce",),
+        )
+        measured = prof.get("pod", "allreduce")
+        analytic = comm.axes["pod"].gbs_per_chip
+        assert measured is not None
+        assert abs(measured - analytic) / analytic <= 0.20
+
+    def test_coarse_data_axis_tracks_chip_level_measurement(self, superpod4):
+        # rack granularity loses intra-rack detail but must keep the
+        # inter-rack trunks' effective bandwidth: within 5% of the exact
+        # 1024-chip pod measurement
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        exact = NetSim(ub_mesh_pod(), routing=Routing.DETOUR).calibrated_profile(
+            16e6, comm=comm, axes=("data",), shapes=("allreduce",)
+        ).get("data", "allreduce")
+        cm = coarsen_superpod(superpod4)
+        coarse = coarse_calibrated_profile(
+            cm, 16e6, axis_sizes={"data": 16}, axes=("data",),
+            shapes=("allreduce",), latency_s=1e-6,   # match the exact run
+        ).get("data", "allreduce")
+        assert coarse == pytest.approx(exact, rel=0.05)
+
+    def test_hrs_io_cap_binds_on_fanout(self, superpod4):
+        # one rack bursting to every peer pod at once must be squeezed to
+        # its single uplink, not n_pods-1 uplinks
+        cm = coarsen_superpod(superpod4)
+        sim = coarse_netsim(cm)
+        net = sim._fresh().net
+        uplink = cm.dim_io_gbs[2] * 1e9
+        hrs_peers = [
+            v for v in range(cm.topo.num_nodes)
+            if cm.topo.are_adjacent(0, v) == 2
+        ]
+        flows = [net.add_flow((0, v), 1e9) for v in hrs_peers]
+        net._recompute()
+        total = sum(f.rate for f in flows)
+        assert total <= uplink * (1 + 1e-6)
+        assert total == pytest.approx(uplink, rel=1e-6)
+
+
+class TestSuperpodPerfModel:
+    def test_pod_axis_priced_on_coarse_measurement(self, superpod4):
+        base = build_comm_model(multi_pod=True, routing=Routing.DETOUR)
+        base = base.override_axis("pod", replace(base.axes["pod"], size=4))
+        perf = NetsimPerfModel(
+            base, topo=ub_mesh_pod(), size_bytes=64e6, superpod=superpod4
+        )
+        cm = perf.comm_model(None)
+        pod = cm.axes["pod"]
+        assert pod.has_shape("allreduce")
+        # measured, clamped at the analytic bound, and within the 20% bar
+        assert pod.gbs_per_chip <= base.axes["pod"].gbs_per_chip + 1e-9
+        assert pod.gbs_per_chip >= 0.80 * base.axes["pod"].gbs_per_chip
+
+    def test_without_superpod_pod_axis_stays_analytic(self):
+        base = build_comm_model(multi_pod=True, routing=Routing.DETOUR)
+        perf = NetsimPerfModel(base, topo=ub_mesh_pod(), size_bytes=64e6)
+        cm = perf.comm_model(None)
+        assert cm.axes["pod"].gbs_per_chip == base.axes["pod"].gbs_per_chip
+        assert not cm.axes["pod"].has_shape("allreduce")
+
+    def test_4096_chip_plan_under_budget(self, superpod4):
+        from repro.core.planner import plan
+        from repro.core.traffic import moe_2t_workload
+
+        base = build_comm_model(multi_pod=True, routing=Routing.DETOUR)
+        base = base.override_axis("pod", replace(base.axes["pod"], size=4))
+        perf = NetsimPerfModel(
+            base, topo=ub_mesh_pod(), size_bytes=64e6, superpod=superpod4
+        )
+        w, _ = moe_2t_workload()
+        t0 = time.perf_counter()
+        rep = plan(w, 4096, perf)
+        wall = time.perf_counter() - t0
+        assert len(rep) > 0
+        assert rep[0].spec.chips == 4096
+        assert wall < 60.0
