@@ -154,6 +154,19 @@ class NetsimPerfModel:
     is priced on measured multi-pod bandwidths.  The memo key gains the
     coarsening level (``coarsen_level``), so rack- and pod-granularity
     calibrations never alias.
+
+    ``detail_racks`` (with ``superpod``) switches the MODEL-axis
+    calibration from the isolated chip-level pod onto a
+    **mixed-granularity** mesh: the named racks stay at chip granularity
+    inside the rack-coarsened SuperPod, and the model-axis collectives
+    are measured inside the embedded rack WHILE a cross-pod DP
+    background AllReduce (``background_bytes`` per chip, default
+    ``size_bytes``) crosses the same rack's trunk uplinks — so the
+    planner finally sees model-axis interference from DCN traffic
+    (ejection-port and uplink sharing), which both the pure-chip and
+    pure-coarse calibrations miss by construction.  The memo key gains
+    the ``detail_racks`` tuple and the background payload, so mixed and
+    isolated model calibrations never alias.
     """
 
     base: CommModel
@@ -165,6 +178,18 @@ class NetsimPerfModel:
     rx_gbs: float | str | None = "auto"
     superpod: SuperPod | None = None
     coarsen_level: str = "rack"
+    detail_racks: tuple[int, ...] = ()
+    background_bytes: float | None = None
+
+    def __post_init__(self) -> None:
+        if self.detail_racks and self.superpod is None:
+            # without a SuperPod there is no coarse mesh to embed the
+            # detail racks in — silently falling back to the isolated
+            # chip-level calibration would defeat the caller's intent
+            raise ValueError(
+                "detail_racks requires superpod= (the mixed-granularity "
+                "mesh embeds the racks in the coarsened SuperPod)"
+            )
 
     @property
     def backend(self) -> str:
@@ -203,11 +228,24 @@ class NetsimPerfModel:
                 _topo_key(self.superpod.pod),
             )
 
+        detail_tag = ()
+        bg_bytes = (
+            self.size_bytes if self.background_bytes is None
+            else self.background_bytes
+        )
+        if self.superpod is not None and self.detail_racks:
+            # mixed-granularity model-axis calibration: keyed on the
+            # embedded racks AND the background payload so isolated and
+            # interference-priced measurements never alias
+            detail_tag = ("detail", tuple(self.detail_racks), bg_bytes)
+
         def key(axis: str, shape: str, w: int | None) -> tuple:
             if shape == "reduce_scatter":
                 shape = "all_gather"
             if axis == "pod":
                 return key_base + coarse_tag + (axis, shape, w)
+            if axis == "model" and detail_tag:
+                return key_base + coarse_tag + detail_tag + (axis, shape, w)
             return key_base + (axis, shape, w)
 
         missing = {
@@ -216,7 +254,14 @@ class NetsimPerfModel:
             if key(axis, shape, w) not in _CALIBRATION_CACHE
         }
         pod_missing = {k: w for k, w in missing.items() if k[0] == "pod"}
-        chip_missing = {k: w for k, w in missing.items() if k[0] != "pod"}
+        mixed_missing = {
+            k: w for k, w in missing.items()
+            if k[0] == "model" and detail_tag
+        }
+        chip_missing = {
+            k: w for k, w in missing.items()
+            if k[0] != "pod" and k not in mixed_missing
+        }
         if chip_missing:
             sim = NetSim(
                 self.topo,
@@ -261,6 +306,39 @@ class NetsimPerfModel:
                     axes=(axis,),
                     shapes=(mshape,),
                     sim=csim,
+                )
+                _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
+                    axis, mshape, self.base.axes[axis].gbs_per_chip
+                )
+        if mixed_missing:
+            from ..netsim.coarsen import (
+                coarsen_superpod,
+                mixed_calibrated_profile,
+                mixed_netsim,
+            )
+
+            cm = coarsen_superpod(
+                self.superpod,
+                level=self.coarsen_level,
+                detail_racks=self.detail_racks,
+            )
+            msim = mixed_netsim(
+                cm,
+                routing=self.base.routing,
+                latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
+            )
+            for (axis, shape), w in mixed_missing.items():
+                mshape = "all_gather" if shape == "reduce_scatter" else shape
+                cal = mixed_calibrated_profile(
+                    cm,
+                    self.size_bytes,
+                    comm=self.base,
+                    widths={} if w is None else {axis: w},
+                    axes=(axis,),
+                    shapes=(mshape,),
+                    background_per_chip_bytes=bg_bytes,
+                    sim=msim,
                 )
                 _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
                     axis, mshape, self.base.axes[axis].gbs_per_chip

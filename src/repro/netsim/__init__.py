@@ -22,7 +22,10 @@ Module map (paper section -> module):
 * ``coarsen``     — rack/pod-coarsened SuperPod meshes (§3.3.4): racks
                     become super-nodes with trunk-aggregated capacities and
                     an IO-capped HRS dimension, so 4096-8192-chip multi-pod
-                    scenarios stay tractable
+                    scenarios stay tractable; ``detail_racks`` embeds
+                    chip-level racks inside the coarse mesh (MixedMesh) so
+                    model-axis collectives can be calibrated against
+                    cross-pod background traffic
 * ``routing``     — APR adapter (§4.1): shortest / detour / borrow path
                     sets from ``core/apr.py`` as per-flow multi-path
                     splits; direct-notification fast recovery (§4.2)
@@ -49,9 +52,13 @@ Quick start::
 from .api import NetSim, NetSimResult                      # noqa: F401
 from .coarsen import (                                     # noqa: F401
     CoarseMesh,
+    MixedMesh,
     coarse_calibrated_profile,
     coarse_netsim,
     coarsen_superpod,
+    cross_pod_background_dag,
+    mixed_calibrated_profile,
+    mixed_netsim,
 )
 from .collectives import (                                 # noqa: F401
     FlowDAG,
@@ -67,9 +74,11 @@ from .collectives import (                                 # noqa: F401
     model_group,
     moe_dispatch,
     multipath_all_to_all,
+    remap_dag,
     ring_all_gather,
     ring_allreduce,
     ring_reduce_scatter,
+    splice_dag,
 )
 from .events import EventEngine                            # noqa: F401
 from .flows import FluidNetwork, default_rx_gbs            # noqa: F401

@@ -192,9 +192,16 @@ class NetSim:
         self.adaptive = adaptive
         self.record_rates = record_rates
         # receiver-egress (incast) cap: "auto" sizes it at the node's
-        # largest per-dimension clique allocation; None disables it
+        # largest per-dimension clique allocation; None disables it.  A
+        # topology carrying per-node ejection bandwidths (``node_rx_gbs``
+        # — mixed-granularity meshes, where a chip and a rack super-node
+        # differ by ~30x) hands "auto" a per-node dict instead.
         if rx_gbs == "auto":
-            self.rx_gbs: float | None = default_rx_gbs(self.topo)
+            node_rx = getattr(self.topo, "node_rx_gbs", None)
+            self.rx_gbs: float | dict[int, float] | None = (
+                dict(node_rx) if node_rx is not None
+                else default_rx_gbs(self.topo)
+            )
         else:
             self.rx_gbs = rx_gbs
         # per-dim per-node IO caps (switched tiers, see flows.dim_io_gbs)
@@ -257,8 +264,14 @@ class NetSim:
         run.start()
         net.run()
         self.last_network = net
+        res = self._dag_result(dag, run, net, name)
+        res.failure_stats = fail_stats
+        return res
+
+    @staticmethod
+    def _dag_result(dag, run: _DagRun, net, name: str | None = None) -> NetSimResult:
         makespan = max(run.end_s.values(), default=0.0)
-        res = NetSimResult(
+        return NetSimResult(
             name=name or dag.name,
             makespan_s=makespan,
             task_end_s=dict(run.end_s),
@@ -269,8 +282,30 @@ class NetSim:
             events=net.engine.events_fired,
             incomplete=len(dag.tasks) - len(run.end_s),
         )
-        res.failure_stats = fail_stats
-        return res
+
+    def run_dags(self, dags: "list[FlowDAG]") -> list[NetSimResult]:
+        """Execute several flow DAGs CONCURRENTLY on one shared network.
+
+        All DAGs start at t=0 and contend for the same links — which is
+        the point: e.g. a model-axis calibration inside an embedded
+        chip-level rack while cross-pod DP background traffic crosses the
+        rack's trunk uplinks (``netsim/coarsen.mixed_calibrated_profile``).
+        Returns one result per DAG in order; each result's utilization is
+        the shared network's, averaged over that DAG's own makespan."""
+        router = self._fresh()
+        net = router.net
+        runs = [
+            _DagRun(router, dag, self.latency_s, aggregate=self.aggregate)
+            for dag in dags
+        ]
+        for run in runs:
+            run.start()
+        net.run()
+        self.last_network = net
+        return [
+            self._dag_result(dag, run, net)
+            for dag, run in zip(dags, runs)
+        ]
 
     def allreduce_time(
         self, dim: int, size_bytes: float, *, fixed: dict[int, int] | None = None
@@ -436,6 +471,33 @@ class NetSim:
         return axis_dims
 
     @staticmethod
+    def _measured_shapes(shapes: tuple[str, ...]) -> tuple[str, ...]:
+        """reduce_scatter aliases the all_gather measurement (same wire
+        schedule), so measure all_gather whenever either is requested —
+        shared by the chip, coarse and mixed calibration paths."""
+        return tuple(dict.fromkeys(
+            "all_gather" if s == "reduce_scatter" else s for s in shapes
+        ))
+
+    @staticmethod
+    def _alias_reduce_scatter(
+        gbs: dict, axis: str, shapes: tuple[str, ...]
+    ) -> None:
+        """Post-measurement bookkeeping for the reduce_scatter alias."""
+        if "reduce_scatter" in shapes and (axis, "all_gather") in gbs:
+            gbs[(axis, "reduce_scatter")] = gbs[(axis, "all_gather")]
+        if "all_gather" not in shapes:
+            gbs.pop((axis, "all_gather"), None)
+
+    @staticmethod
+    def _width_of(widths: "dict | None", axis: str, shape: str) -> int | None:
+        """Calibration group width: ``(axis, shape)`` key wins over the
+        bare axis key."""
+        if not widths:
+            return None
+        return widths.get((axis, shape), widths.get(axis))
+
+    @staticmethod
     def _wire_fraction(shape: str, n: int) -> float:
         """Per-chip wire bytes of ``shape`` as a fraction of the payload —
         the inverse of the matching ``CommModel`` formula, so the measured
@@ -520,22 +582,12 @@ class NetSim:
             axis_sizes = {k: a.size for k, a in comm.axes.items()}
         sizes = axis_sizes or {"model": 16, "data": 16}
 
-        def width_of(axis: str, shape: str) -> int | None:
-            if not widths:
-                return None
-            return widths.get((axis, shape), widths.get(axis))
-
-        # reduce_scatter aliases the all_gather measurement (same wire
-        # schedule), so measure all_gather whenever either is requested
-        measured_shapes = tuple(dict.fromkeys(
-            "all_gather" if s == "reduce_scatter" else s for s in shapes
-        ))
         gbs: dict[tuple[str, str], float] = {}
         for axis, dims in axis_dims.items():
             n = sizes.get(axis, 16)
-            for shape in measured_shapes:
+            for shape in self._measured_shapes(shapes):
                 dag = self._axis_shape_dag(
-                    dims, shape, size_bytes, width_of(axis, shape),
+                    dims, shape, size_bytes, self._width_of(widths, axis, shape),
                     tag=f"cal-{axis}-{shape}",
                 )
                 if dag is None or not dag.tasks:
@@ -545,8 +597,5 @@ class NetSim:
                     continue
                 wire = self._wire_fraction(shape, n) * size_bytes
                 gbs[(axis, shape)] = wire / t / 1e9
-            if "reduce_scatter" in shapes and (axis, "all_gather") in gbs:
-                gbs[(axis, "reduce_scatter")] = gbs[(axis, "all_gather")]
-            if "all_gather" not in shapes:
-                gbs.pop((axis, "all_gather"), None)
+            self._alias_reduce_scatter(gbs, axis, shapes)
         return CalibrationProfile(gbs=gbs)

@@ -108,6 +108,101 @@ class FlowDAG:
 
 
 # ---------------------------------------------------------------------------
+# DAG transforms (mixed-granularity support)
+# ---------------------------------------------------------------------------
+
+
+def remap_dag(dag: FlowDAG, mapping) -> FlowDAG:
+    """A copy of ``dag`` with every node id passed through ``mapping`` (a
+    dict or a callable); sizes, deps, tags and single-path flags are
+    preserved.  Lets a collective compile on a small standalone topology
+    (e.g. the chip-level 2D rack mesh, where all the multi-ring / relay-A2A
+    conventions already exist) and execute inside a larger one (the
+    mixed-granularity coarse mesh, where that rack's chips sit at offset
+    node ids)."""
+    f = mapping.__getitem__ if isinstance(mapping, dict) else mapping
+    out = FlowDAG(name=dag.name)
+    for t in dag.tasks:
+        out._add(
+            src=f(t.src),
+            dst=f(t.dst),
+            size=t.size,
+            deps=t.deps,
+            single_path=t.single_path,
+            tag=t.tag,
+            pairs=tuple((f(u), f(v)) for u, v in t.pairs),
+        )
+    return out
+
+
+def splice_dag(dag: FlowDAG, expand) -> FlowDAG:
+    """Rewrite a super-node-granularity DAG onto a mixed-granularity mesh.
+
+    ``expand(node)`` returns the member chip ids of a detail super-node
+    (or ``None`` for nodes that exist as-is in the target mesh).  Every
+    task pair with a detail endpoint is split across the members, each
+    carrying ``1/len(members)`` of the pair's bytes — a rack-level send
+    becomes its chips' trunk/uplink shares, the same unit conversion
+    ``coarse_calibrated_profile`` applies to payloads.  A pair whose BOTH
+    endpoints are detail racks pairs members index-to-index (the trunk's
+    chip-to-chip lanes, paper Fig. 8-(d)).
+
+    Aggregate ``FlowTask``s require symmetric members (one per-member
+    size and one shared rate), so a spliced task splits into one task per
+    SYMMETRY CLASS — (member count, src-side detail?, dst-side detail?) —
+    all sharing the original task's deps; downstream tasks depend on
+    every piece, preserving the ring-step barrier.  The class split
+    matters for fidelity: a detail rack's inbound trunk shares (bounded
+    by its chips' ejection ports) and outbound shares (bounded by their
+    injection caps) can drain at different rates, and lumping them into
+    one aggregate would pin the faster class at the slower class's rate
+    for the whole step instead of letting it finish early.  The step
+    barrier still completes at the slowest class, so under symmetric
+    capacities spliced coarse runs stay aligned with pure-coarse ones
+    (the pure aggregate also completes at its slowest member)."""
+    out = FlowDAG(name=dag.name)
+    tid_map: dict[int, tuple[int, ...]] = {}
+    for t in dag.tasks:
+        deps = tuple(nt for d in t.deps for nt in tid_map[d])
+        groups: dict[tuple, list[tuple[int, int]]] = {}
+        for (u, v) in (t.pairs or ((t.src, t.dst),)):
+            eu, ev = expand(u), expand(v)
+            if eu is None and ev is None:
+                groups.setdefault((1, False, False), []).append((u, v))
+            elif eu is not None and ev is not None:
+                if len(eu) != len(ev):
+                    raise ValueError(
+                        f"detail super-nodes {u} and {v} have mismatched "
+                        f"member counts ({len(eu)} vs {len(ev)})"
+                    )
+                groups.setdefault((len(eu), True, True), []).extend(
+                    zip(eu, ev)
+                )
+            elif eu is not None:
+                groups.setdefault((len(eu), True, False), []).extend(
+                    (m, v) for m in eu
+                )
+            else:
+                groups.setdefault((len(ev), False, True), []).extend(
+                    (u, m) for m in ev
+                )
+        new_tids = []
+        for (div, _su, _sv), pairs in sorted(groups.items()):
+            nt = out._add(
+                src=pairs[0][0],
+                dst=pairs[0][1],
+                size=t.size / div,
+                deps=deps,
+                single_path=t.single_path,
+                tag=t.tag,
+                pairs=tuple(pairs) if (len(pairs) > 1 or t.pairs) else (),
+            )
+            new_tids.append(nt.tid)
+        tid_map[t.tid] = tuple(new_tids)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # clique helpers
 # ---------------------------------------------------------------------------
 

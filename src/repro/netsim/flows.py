@@ -134,15 +134,23 @@ class FluidNetwork:
         *,
         record_rates: bool = False,
         rx_gbs: float | dict[int, float] | None = None,
-        dim_io_gbs: dict[int, float] | None = None,
+        dim_io_gbs: "dict[int, float | dict[int, float]] | None" = None,
         solver: str = "vectorized",
     ) -> None:
         self.topo = topo
         self.engine = engine or EventEngine()
         self.capacity: dict[DirectedLink, float] = {}    # bytes/s
         self._link_dim: dict[DirectedLink, int] = {}     # wire link -> dim
+        # a topology carrying its own ``link_gbs(u, v)`` has heterogeneous
+        # per-link capacities (the mixed-granularity coarse meshes: chip
+        # links next to rack trunks); a plain NDFullMesh prices every link
+        # of a dimension at that dim's gbs_per_peer
+        link_gbs = getattr(topo, "link_gbs", None)
         for u, v, d in topo.links():
-            gbs = topo.dims[d].gbs_per_peer * 1e9
+            gbs = (
+                link_gbs(u, v) if link_gbs is not None
+                else topo.dims[d].gbs_per_peer
+            ) * 1e9
             self.capacity[(u, v)] = gbs
             self.capacity[(v, u)] = gbs
             self._link_dim[(u, v)] = d
@@ -154,10 +162,17 @@ class FluidNetwork:
             self.rx_cap = {n: g * 1e9 for n, g in rx_gbs.items()}
         else:
             self.rx_cap = {n: rx_gbs * 1e9 for n in range(topo.num_nodes)}
-        # per-dimension per-node IO caps (switched tiers), bytes/s
-        self.dim_io_cap: dict[int, float] = {
-            d: g * 1e9 for d, g in (dim_io_gbs or {}).items()
-        }
+        # per-dimension per-node IO caps (switched tiers), bytes/s.  A
+        # dict-valued entry carries heterogeneous per-node caps (mixed-
+        # granularity meshes: each detail chip is bounded by its own
+        # uplink share, each coarse rack by the whole uplink); nodes
+        # absent from a per-node dict are uncapped on that dimension.
+        self.dim_io_cap: dict[int, "float | dict[int, float]"] = {}
+        for d, g in (dim_io_gbs or {}).items():
+            if isinstance(g, dict):
+                self.dim_io_cap[d] = {n: gn * 1e9 for n, gn in g.items()}
+            else:
+                self.dim_io_cap[d] = g * 1e9
         self.failed: set[DirectedLink] = set()
         self.flows: dict[int, Flow] = {}                 # active flows
         self.completed: dict[int, Flow] = {}
@@ -206,7 +221,10 @@ class FluidNetwork:
         if k0 == RX_PORT:
             return self.rx_cap[key[1]]
         if k0 == IO_TX or k0 == IO_RX:
-            return self.dim_io_cap[key[1]]
+            cap = self.dim_io_cap[key[1]]
+            if isinstance(cap, dict):
+                return cap[key[2]]
+            return cap
         return self.effective_capacity(key)
 
     def _constraints_for(
@@ -220,7 +238,15 @@ class FluidNetwork:
         if self.dim_io_cap:
             for (u, v) in links:
                 d = self._link_dim.get((u, v))
-                if d in self.dim_io_cap:
+                cap = self.dim_io_cap.get(d) if d is not None else None
+                if cap is None:
+                    continue
+                if isinstance(cap, dict):
+                    if u in cap:
+                        extra.append((IO_TX, d, u))
+                    if v in cap:
+                        extra.append((IO_RX, d, v))
+                else:
                     extra.append((IO_TX, d, u))
                     extra.append((IO_RX, d, v))
         return links + tuple(extra) if extra else links

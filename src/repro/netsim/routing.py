@@ -94,6 +94,35 @@ class Router:
                 net.add_link(u, self.switch_node, borrow_gbs)
 
     # -- path sets ---------------------------------------------------------
+    # An NDFullMesh gets core/apr's coordinate-based enumeration plus TFC
+    # admission.  A topology carrying its own ``apr_shortest_paths`` /
+    # ``apr_all_paths`` (the mixed-granularity coarse meshes, which are
+    # NOT Hamming graphs) supplies graph-generic BFS path sets instead;
+    # those are simple loop-free paths by construction, and TFC's VL
+    # rules need dimension-ordered hops, so they are used as-is.
+    def _shortest_set(self, src: int, dst: int) -> list[Path]:
+        fn = getattr(self.topo, "apr_shortest_paths", None)
+        if fn is not None:
+            return fn(src, dst)
+        return shortest_paths(self.topo, src, dst)
+
+    def _all_path_set(self, src: int, dst: int) -> list[Path]:
+        fn = getattr(self.topo, "apr_all_paths", None)
+        if fn is not None:
+            return fn(src, dst)
+        return all_paths(self.topo, src, dst)
+
+    def _admissible_set(self, src: int, dst: int) -> list[Path]:
+        fn = getattr(self.topo, "apr_all_paths", None)
+        if fn is not None:
+            return fn(src, dst)
+        return [
+            p
+            for p, _ in tfc_admissible(
+                self.topo, all_paths(self.topo, src, dst)
+            )
+        ]
+
     def _alive(self, p: Path) -> bool:
         return all(self.net.link_ok(u, v) for u, v in zip(p, p[1:]))
 
@@ -112,22 +141,16 @@ class Router:
     def _candidate_paths(self, src: int, dst: int, single: bool) -> list[Path]:
         if src == dst:
             return [(src,)]
-        sp = [p for p in shortest_paths(self.topo, src, dst) if self._alive(p)]
+        sp = [p for p in self._shortest_set(src, dst) if self._alive(p)]
         if single or self.policy == Routing.SHORTEST:
             if sp:
                 return [sp[0]]      # first permutation == dimension-ordered
             # fast recovery: any surviving APR path
-            for p in all_paths(self.topo, src, dst):
+            for p in self._all_path_set(src, dst):
                 if self._alive(p):
                     return [p]
             raise RuntimeError(f"no surviving path {src}->{dst}")
-        adm = [
-            p
-            for p, _ in tfc_admissible(
-                self.topo, all_paths(self.topo, src, dst)
-            )
-            if self._alive(p)
-        ]
+        adm = [p for p in self._admissible_set(src, dst) if self._alive(p)]
         # greedy link-disjoint subset, shortest first (path_diversity's rule)
         chosen: list[Path] = []
         used: set[tuple[int, int]] = set()
