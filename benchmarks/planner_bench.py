@@ -63,6 +63,15 @@ def planner_backends():
         derived[f"{name}/iter_s_analytic"] = round(ra[0].iteration_s, 3)
         derived[f"{name}/iter_s_netsim"] = round(rn[0].iteration_s, 3)
         derived[f"{name}/skipped"] = rn.n_skipped
+        # per-exception attribution: a nonzero bucket here names the
+        # simulate() failure mode instead of hiding it in one total
+        for exc, n in sorted(rn.skipped.items()):
+            derived[f"{name}/skipped:{exc}"] = n
+        derived[f"{name}/plan_wall_s"] = round(rn.wall_s, 3)
+        cal = rn.calibration
+        derived[f"{name}/cal_hits"] = cal.get("hits", 0)
+        derived[f"{name}/cal_misses"] = cal.get("misses", 0)
+        derived[f"{name}/cal_measure_s"] = round(cal.get("measure_s", 0.0), 3)
     # shape-awareness flip: same netsim backend, AllReduce proxy vs profile
     proxy = NetsimPerfModel(
         comm, topo=ub_mesh_pod(), size_bytes=_CAL_BYTES, shapes=("allreduce",)

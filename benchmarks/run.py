@@ -35,8 +35,31 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+
+def _write_traces(trace_dir: str) -> list[str]:
+    """Run the canonical trunk-congestion scenario under each §4.1 routing
+    strategy with telemetry on and drop one Perfetto trace per strategy
+    into ``trace_dir`` (CI uploads the directory as an artifact; open the
+    files in https://ui.perfetto.dev)."""
+    from repro.core.cost_model import Routing
+    from repro.netsim import NetSim, trunk_congestion
+
+    os.makedirs(trace_dir, exist_ok=True)
+    sc = trunk_congestion()
+    written = []
+    for pol in (Routing.SHORTEST, Routing.DETOUR, Routing.BORROW):
+        sim = NetSim(
+            sc.topo, routing=pol, rx_gbs=sc.rx_gbs, telemetry=True
+        )
+        res = sim.run_dag(sc.dag)
+        path = os.path.join(trace_dir, f"trace_{pol.value}.json")
+        res.telemetry.to_perfetto(path)
+        written.append(path)
+    return written
 
 
 def _fmt(d: dict) -> str:
@@ -97,6 +120,13 @@ def main() -> None:
         type=float,
         default=0.25,
         help="allowed relative regression on guarded metrics (default 25%%)",
+    )
+    ap.add_argument(
+        "--trace-dir",
+        metavar="DIR",
+        default=None,
+        help="also write Perfetto traces of the trunk-congestion scenario "
+        "(one per routing strategy) into DIR",
     )
     args = ap.parse_args()
 
@@ -169,6 +199,16 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    if args.trace_dir:
+        try:
+            for path in _write_traces(args.trace_dir):
+                print(f"trace: {path}", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(
+                f"trace export failed: {type(e).__name__}: {e}",
+                file=sys.stderr,
+            )
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(

@@ -1,0 +1,70 @@
+"""Telemetry walkthrough: watch §4.1 All-Path Routing relieve a congested
+trunk, then export Perfetto traces of all three strategies.
+
+Fig. 19 in miniature: rack (0,0) sends three transfers to (1,1)..(1,3)
+on the (Z, A) inter-rack mesh.  Every dimension-ordered shortest path
+funnels through the single trunk (0,0)->(1,0); DETOUR and BORROW split
+each transfer over ~4 APR paths so the receiver-egress cap binds instead
+and the trunk never saturates.  Telemetry makes the difference visible:
+per-link utilization timelines, bottleneck attribution straight from the
+max-min solver's freeze step, and a Perfetto trace per strategy.
+
+    PYTHONPATH=src python examples/trace_apr.py [out_dir]
+
+Open the written ``trace_*.json`` files at https://ui.perfetto.dev —
+links are counter tracks, ring steps span lanes, transfers async spans.
+"""
+
+import os
+import sys
+
+from repro.core.cost_model import Routing
+from repro.netsim import NetSim, trunk_congestion
+
+out_dir = sys.argv[1] if len(sys.argv) > 1 else "traces"
+os.makedirs(out_dir, exist_ok=True)
+
+sc = trunk_congestion()
+hot = sc.hot_link
+hot_name = f"{hot[0]}->{hot[1]}"
+print(f"trunk-congestion on {sc.topo.shape} mesh: "
+      f"{len(sc.dag.tasks)} transfers, hot trunk {hot_name}, "
+      f"rx cap {sc.rx_gbs:.2f} GB/s\n")
+
+peaks = {}
+summaries = {}
+for pol in (Routing.SHORTEST, Routing.DETOUR, Routing.BORROW):
+    sim = NetSim(sc.topo, routing=pol, rx_gbs=sc.rx_gbs, telemetry=True)
+    res = sim.run_dag(sc.dag)
+    tel = res.telemetry
+    peaks[pol] = tel.peak_utilization(hot)
+    summaries[pol] = tel.summary()
+    path = os.path.join(out_dir, f"trace_{pol.value}.json")
+    tel.to_perfetto(path)
+    s = summaries[pol]
+    top_bn = s["bottlenecks"]["top"][0][0] if s["bottlenecks"]["top"] else "-"
+    print(f"{pol.value:>8}: makespan {res.makespan_s*1e3:6.3f} ms | "
+          f"trunk peak util {peaks[pol]:.2f} | "
+          f"top bottleneck {top_bn} | "
+          f"borrow launches {s['router']['borrow_path_launches']}"
+          f"  -> {path}")
+
+# --- the claims the trace should show --------------------------------------
+shortest_bn = {
+    name for name, _ in summaries[Routing.SHORTEST]["bottlenecks"]["top"]
+}
+assert peaks[Routing.SHORTEST] > 0.99, (
+    f"shortest should saturate the trunk, peak={peaks[Routing.SHORTEST]}"
+)
+assert hot_name in shortest_bn, (
+    f"attribution should name the congested trunk {hot_name}, got {shortest_bn}"
+)
+assert peaks[Routing.BORROW] < peaks[Routing.SHORTEST] - 0.2, (
+    f"borrow should relieve the trunk: {peaks[Routing.BORROW]} "
+    f"vs {peaks[Routing.SHORTEST]}"
+)
+print(f"\nAPR relief confirmed: trunk peak {peaks[Routing.SHORTEST]:.2f} "
+      f"(shortest) -> {peaks[Routing.DETOUR]:.2f} (detour) -> "
+      f"{peaks[Routing.BORROW]:.2f} (borrow); under shortest the solver "
+      f"attributes the stall to {hot_name}, under detour/borrow to the "
+      f"receiver-egress caps.")

@@ -39,6 +39,7 @@ Two spec-dependences matter for planning:
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field, replace
 from typing import Protocol, runtime_checkable
 
@@ -119,6 +120,43 @@ def _topo_key(topo: NDFullMesh) -> tuple:
 # unique (topology, axis, shape, group-width, routing, payload, latency, rx)
 # — the same key appears once whether the planner scores 10 specs or 1000
 _CALIBRATION_CACHE: dict[tuple, float] = {}
+
+# running memo-effectiveness counters, cumulative since import (or the last
+# ``reset_calibration_stats``).  ``per_key_s`` keeps the netsim wall cost of
+# each (axis, shape, width) actually measured — the observability hook that
+# shows WHERE planner time goes when the memo misses
+_CALIBRATION_STATS: dict = {
+    "hits": 0,
+    "misses": 0,
+    "measure_s": 0.0,
+    "per_key_s": {},
+}
+
+
+def calibration_stats() -> dict:
+    """Snapshot of the shared calibration-memo counters: ``hits`` /
+    ``misses`` (cache lookups by ``_calibrate``), ``measure_s`` (total
+    netsim wall seconds spent measuring), and ``per_key_s`` mapping each
+    measured ``(axis, shape, width)`` to its wall cost."""
+    return {
+        "hits": _CALIBRATION_STATS["hits"],
+        "misses": _CALIBRATION_STATS["misses"],
+        "measure_s": _CALIBRATION_STATS["measure_s"],
+        "per_key_s": dict(_CALIBRATION_STATS["per_key_s"]),
+    }
+
+
+def reset_calibration_stats() -> None:
+    """Zero the memo counters (the cache itself is untouched)."""
+    _CALIBRATION_STATS.update(hits=0, misses=0, measure_s=0.0)
+    _CALIBRATION_STATS["per_key_s"] = {}
+
+
+def _record_measurement(axis: str, shape: str, w: int | None, dt: float) -> None:
+    _CALIBRATION_STATS["measure_s"] += dt
+    per_key = _CALIBRATION_STATS["per_key_s"]
+    k = (axis, shape, w)
+    per_key[k] = per_key.get(k, 0.0) + dt
 
 
 @dataclass(frozen=True)
@@ -253,6 +291,8 @@ class NetsimPerfModel:
             for (axis, shape), w in widths.items()
             if key(axis, shape, w) not in _CALIBRATION_CACHE
         }
+        _CALIBRATION_STATS["hits"] += len(widths) - len(missing)
+        _CALIBRATION_STATS["misses"] += len(missing)
         pod_missing = {k: w for k, w in missing.items() if k[0] == "pod"}
         mixed_missing = {
             k: w for k, w in missing.items()
@@ -271,6 +311,7 @@ class NetsimPerfModel:
             )
             for (axis, shape), w in chip_missing.items():
                 mshape = "all_gather" if shape == "reduce_scatter" else shape
+                t0 = time.perf_counter()
                 cal = sim.calibrated_profile(
                     self.size_bytes,
                     comm=self.base,
@@ -278,6 +319,7 @@ class NetsimPerfModel:
                     axes=(axis,),
                     shapes=(mshape,),
                 )
+                _record_measurement(axis, shape, w, time.perf_counter() - t0)
                 # shapes netsim could not measure fall back to the analytic bw
                 _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
                     axis, mshape, self.base.axes[axis].gbs_per_chip
@@ -298,6 +340,7 @@ class NetsimPerfModel:
             )
             for (axis, shape), w in pod_missing.items():
                 mshape = "all_gather" if shape == "reduce_scatter" else shape
+                t0 = time.perf_counter()
                 cal = coarse_calibrated_profile(
                     cm,
                     self.size_bytes,
@@ -307,6 +350,7 @@ class NetsimPerfModel:
                     shapes=(mshape,),
                     sim=csim,
                 )
+                _record_measurement(axis, shape, w, time.perf_counter() - t0)
                 _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
                     axis, mshape, self.base.axes[axis].gbs_per_chip
                 )
@@ -330,6 +374,7 @@ class NetsimPerfModel:
             )
             for (axis, shape), w in mixed_missing.items():
                 mshape = "all_gather" if shape == "reduce_scatter" else shape
+                t0 = time.perf_counter()
                 cal = mixed_calibrated_profile(
                     cm,
                     self.size_bytes,
@@ -340,6 +385,7 @@ class NetsimPerfModel:
                     background_per_chip_bytes=bg_bytes,
                     sim=msim,
                 )
+                _record_measurement(axis, shape, w, time.perf_counter() - t0)
                 _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
                     axis, mshape, self.base.axes[axis].gbs_per_chip
                 )

@@ -18,6 +18,7 @@ from __future__ import annotations
 import itertools
 import logging
 import math
+import time
 from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Iterator
 
@@ -86,12 +87,21 @@ class PlanReport:
     Sequence-like over ``results`` so ``plan(...)[0]`` / iteration keep
     working; ``skipped`` counts specs whose simulation RAISED (by exception
     type) — previously swallowed silently, which hid cost-model bugs.
+
+    ``wall_s`` is the search's wall-clock cost and ``calibration`` the
+    netsim calibration-memo delta over the search (``hits`` / ``misses`` /
+    ``measure_s`` / ``per_key_s`` from
+    ``core.perf_model.calibration_stats``) — together they attribute
+    planner latency: a search that re-measures is slow in ``measure_s``,
+    a memo-warm one is pure enumeration.
     """
 
     results: tuple[PlanResult, ...]
     n_enumerated: int = 0
     n_infeasible: int = 0                      # failed memory_feasible
     skipped: dict[str, int] = field(default_factory=dict)
+    wall_s: float = 0.0
+    calibration: dict = field(default_factory=dict)
 
     @property
     def n_skipped(self) -> int:
@@ -180,8 +190,11 @@ def plan(
     counted per exception type on ``PlanReport.skipped`` and summarized in
     one log line — not silently dropped, so model bugs stay visible.
     """
+    from .perf_model import calibration_stats  # local import to avoid cycle
     from .simulator import simulate  # local import to avoid cycle
 
+    t_start = time.perf_counter()
+    cal_before = calibration_stats()
     results: list[PlanResult] = []
     skipped: dict[str, int] = {}
     n_enumerated = 0
@@ -211,11 +224,24 @@ def plan(
             w.name, chips, sum(skipped.values()), n_enumerated, skipped,
         )
     results.sort(key=lambda x: x.iteration_s)
+    cal_after = calibration_stats()
+    calibration = {
+        "hits": cal_after["hits"] - cal_before["hits"],
+        "misses": cal_after["misses"] - cal_before["misses"],
+        "measure_s": cal_after["measure_s"] - cal_before["measure_s"],
+        "per_key_s": {
+            "{}/{}/{}".format(*k): dt - cal_before["per_key_s"].get(k, 0.0)
+            for k, dt in cal_after["per_key_s"].items()
+            if dt - cal_before["per_key_s"].get(k, 0.0) > 0.0
+        },
+    }
     return PlanReport(
         results=tuple(results[:top_k]),
         n_enumerated=n_enumerated,
         n_infeasible=n_infeasible,
         skipped=skipped,
+        wall_s=time.perf_counter() - t_start,
+        calibration=calibration,
     )
 
 

@@ -37,7 +37,14 @@ Module map (paper section -> module):
                     ``calibrated_profile`` behind
                     ``core.perf_model.NetsimPerfModel`` (§6 evaluation loop)
 * ``scenarios``   — canonical traffic patterns (cross-rack hotspot,
-                    inter-rack mesh) shared by benchmarks and tests
+                    inter-rack mesh, trunk congestion) shared by
+                    benchmarks, examples and tests
+* ``telemetry``   — opt-in recorder threaded through engine, solvers
+                    and router: per-link utilization timelines,
+                    solver-level bottleneck attribution, flow lifecycle
+                    traces, router counters; exports a structured
+                    summary dict and Perfetto trace JSON
+                    (observability layer; no paper section)
 
 Quick start::
 
@@ -83,4 +90,10 @@ from .collectives import (                                 # noqa: F401
 from .events import EventEngine                            # noqa: F401
 from .flows import FluidNetwork, default_rx_gbs            # noqa: F401
 from .routing import Router, Transfer                      # noqa: F401
-from .scenarios import hotspot_dag, inter_rack_mesh        # noqa: F401
+from .scenarios import (                                   # noqa: F401
+    TrunkCongestion,
+    hotspot_dag,
+    inter_rack_mesh,
+    trunk_congestion,
+)
+from .telemetry import FlowTrace, Telemetry                # noqa: F401

@@ -51,6 +51,7 @@ from .collectives import (
 from .events import EventEngine
 from .flows import FluidNetwork, default_rx_gbs
 from .routing import Router, Transfer
+from .telemetry import Telemetry
 
 
 @dataclass
@@ -67,6 +68,9 @@ class NetSimResult:
     transfer_counts: dict[str, float] = field(default_factory=dict)
     incomplete: int = 0                            # tasks never finished
     failure_stats: dict = field(default_factory=dict)   # from Router.fail_link
+    # the run's Telemetry recorder when the NetSim was built with
+    # ``telemetry=True`` (None otherwise; see netsim/telemetry.py)
+    telemetry: "Telemetry | None" = None
 
     @property
     def max_link_utilization(self) -> float:
@@ -124,6 +128,9 @@ class _DagRun:
 
     def _send(self, tid: int) -> None:
         task = self.dag.tasks[tid]
+        tel = self.router.net.telemetry
+        if tel is not None:
+            tel.task_labels[tid] = task.tag or f"task{tid}"
         if task.pairs and self.aggregate:
             self.router.net.add_aggregate_flow(
                 task.pairs,
@@ -184,6 +191,7 @@ class NetSim:
         solver: str = "vectorized",
         aggregate: bool = True,
         axis_dims: dict[str, tuple[int, ...]] | None = None,
+        telemetry: bool = False,
     ) -> None:
         self.topo = topo or ub_mesh_pod()
         self.routing = routing
@@ -216,10 +224,17 @@ class NetSim:
         # logical-axis -> topology-dims override (rack-coarsened meshes lay
         # their axes out differently from the pod convention)
         self.axis_dims = axis_dims
+        # record a Telemetry per run (utilization timelines, bottleneck
+        # attribution, router counters; exported via
+        # NetSimResult.telemetry.summary()/to_perfetto())
+        self.telemetry = telemetry
         self.last_network: FluidNetwork | None = None   # post-run inspection
+        self.last_telemetry: Telemetry | None = None
 
     # -- plumbing ----------------------------------------------------------
     def _fresh(self) -> Router:
+        tel = Telemetry() if self.telemetry else None
+        self.last_telemetry = tel
         net = FluidNetwork(
             self.topo,
             EventEngine(),
@@ -227,6 +242,7 @@ class NetSim:
             rx_gbs=self.rx_gbs,
             dim_io_gbs=self.dim_io_gbs,
             solver=self.solver,
+            telemetry=tel,
         )
         return Router(
             net,
@@ -266,6 +282,7 @@ class NetSim:
         self.last_network = net
         res = self._dag_result(dag, run, net, name)
         res.failure_stats = fail_stats
+        res.telemetry = net.telemetry
         return res
 
     @staticmethod
@@ -302,10 +319,12 @@ class NetSim:
             run.start()
         net.run()
         self.last_network = net
-        return [
-            self._dag_result(dag, run, net)
-            for dag, run in zip(dags, runs)
-        ]
+        results = []
+        for dag, run in zip(dags, runs):
+            r = self._dag_result(dag, run, net)
+            r.telemetry = net.telemetry      # shared network, shared recorder
+            results.append(r)
+        return results
 
     def allreduce_time(
         self, dim: int, size_bytes: float, *, fixed: dict[int, int] | None = None

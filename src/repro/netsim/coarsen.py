@@ -422,10 +422,13 @@ def coarse_netsim(
     latency_s: float = 5e-6,
     rx_gbs: "float | str | None" = "auto",
     solver: str = "vectorized",
+    telemetry: bool = False,
     **kw,
 ):
     """A ``NetSim`` over the coarse topology with the coarse axis layout
-    and the HRS IO caps pre-wired."""
+    and the HRS IO caps pre-wired.  ``telemetry=True`` records link
+    timelines / bottleneck attribution exactly as on chip-level meshes
+    (coarse trunk links show up as one capacity-aggregated link each)."""
     from .api import NetSim  # deferred: avoid import cycle at package init
 
     return NetSim(
@@ -434,6 +437,7 @@ def coarse_netsim(
         latency_s=latency_s,
         rx_gbs=rx_gbs,
         solver=solver,
+        telemetry=telemetry,
         axis_dims=cm.axis_dims,
         dim_io_gbs=cm.dim_io_gbs or None,
         **kw,
@@ -482,6 +486,7 @@ def mixed_netsim(
     latency_s: float = 5e-6,
     rx_gbs: "float | str | None" = "auto",
     solver: str = "vectorized",
+    telemetry: bool = False,
     **kw,
 ):
     """A ``NetSim`` over a mixed-granularity mesh: heterogeneous per-node
@@ -495,6 +500,7 @@ def mixed_netsim(
         latency_s=latency_s,
         rx_gbs=rx_gbs,
         solver=solver,
+        telemetry=telemetry,
         **kw,
     )
 

@@ -41,6 +41,8 @@ class EventEngine:
         self._heap: list[Event] = []
         self._seq: int = 0
         self.events_fired: int = 0
+        # optional per-event observer (telemetry); None = zero-cost
+        self.observer: Callable[[float], Any] | None = None
 
     # -- scheduling --------------------------------------------------------
     def schedule(self, delay: float, fn: Callable[[], Any]) -> Event:
@@ -66,6 +68,8 @@ class EventEngine:
                 continue
             self.now = ev.time
             self.events_fired += 1
+            if self.observer is not None:
+                self.observer(ev.time)
             ev.fn()
             return True
         return False

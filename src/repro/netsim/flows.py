@@ -136,6 +136,7 @@ class FluidNetwork:
         rx_gbs: float | dict[int, float] | None = None,
         dim_io_gbs: "dict[int, float | dict[int, float]] | None" = None,
         solver: str = "vectorized",
+        telemetry: "object | None" = None,
     ) -> None:
         self.topo = topo
         self.engine = engine or EventEngine()
@@ -186,6 +187,11 @@ class FluidNetwork:
         self._link_bytes: dict[DirectedLink, float] = {}  # credited per link
         self.record_rates = record_rates
         self.rate_log: list[tuple[float, DirectedLink, float, float]] = []
+        # opt-in telemetry recorder (netsim/telemetry.Telemetry); every
+        # hot-path hook is a single `is not None` check when disabled
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry._attach(self)
         self.solver = make_solver(solver, self)
 
     # -- topology edits ----------------------------------------------------
@@ -279,12 +285,16 @@ class FluidNetwork:
             flow.remaining = 0.0
             flow.end_s = self.engine.now
             self.completed[fid] = flow
+            if self.telemetry is not None:
+                self.telemetry.flow_completed(flow)
             if on_complete:
                 on_complete(flow)
             return flow
         self._advance()
         self.flows[fid] = flow
         self.solver.flow_added(flow)
+        if self.telemetry is not None:
+            self.telemetry.flow_started(flow)
         self._mark_dirty()
         return flow
 
@@ -324,12 +334,16 @@ class FluidNetwork:
             flow.remaining = 0.0
             flow.end_s = self.engine.now
             self.completed[fid] = flow
+            if self.telemetry is not None:
+                self.telemetry.flow_completed(flow)
             if on_complete:
                 on_complete(flow)
             return flow
         self._advance()
         self.flows[fid] = flow
         self.solver.flow_added(flow)
+        if self.telemetry is not None:
+            self.telemetry.flow_started(flow)
         self._mark_dirty()
         return flow
 
@@ -339,6 +353,8 @@ class FluidNetwork:
         if self.flows.pop(flow.fid, None) is not None:
             self._credit(flow)
             self.solver.flow_removed(flow)
+            if self.telemetry is not None:
+                self.telemetry.flow_withdrawn(flow)
         self._mark_dirty()
         return max(0.0, flow.remaining)
 
@@ -387,6 +403,13 @@ class FluidNetwork:
         solver (``netsim/solver.py``); remembers the flowing set so
         ``_advance`` can skip zero-rate flows up front."""
         self._flowing = self.solver.solve()
+        if self.telemetry is not None:
+            self.telemetry.record_solve(
+                self.engine.now,
+                self.flows,
+                getattr(self.solver, "last_attribution", None),
+                self._flowing,
+            )
         if self.record_rates:
             used: dict[DirectedLink, float] = {}
             for f in self._flowing:
@@ -444,6 +467,8 @@ class FluidNetwork:
                 self.solver.flow_removed(f)
                 f.end_s = self.engine.now
                 self.completed[f.fid] = f
+                if self.telemetry is not None:
+                    self.telemetry.flow_completed(f)
             for f in done:
                 if f.on_complete:
                     f.on_complete(f)

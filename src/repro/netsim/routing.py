@@ -212,6 +212,8 @@ class Router:
         )
         self._next_tid += 1
         self.transfers[t.tid] = t
+        if self.net.telemetry is not None:
+            self.net.telemetry.router_counters["transfers"] += 1
         if src == dst or size <= _EPS:
             self._finish(t)
             return t
@@ -220,6 +222,8 @@ class Router:
 
     def _launch(self, t: Transfer, nbytes: float) -> None:
         paths = self.candidate_paths(t.src, t.dst, single=t.single_path)
+        if self.net.telemetry is not None:
+            self.net.telemetry.record_launch(paths, self.switch_node)
         # a single path needs no congestion weighting (it normalizes out),
         # and collective ring steps are all single-path — skipping the
         # all-active-flows link census there makes large multi-ring DAG
@@ -283,6 +287,8 @@ class Router:
             # a path freed up: re-split the laggards' remaining bytes over
             # the full path set (congestion-aware), the APR re-balance
             t.resplits += 1
+            if self.net.telemetry is not None:
+                self.net.telemetry.router_counters["resplits"] += 1
             left = self._withdraw(t)
             if left <= _EPS:
                 self._finish(t)
@@ -295,6 +301,8 @@ class Router:
         t.done = True
         t.delivered = t.size
         t.end_s = self.net.engine.now
+        if self.net.telemetry is not None:
+            self.net.telemetry.record_transfer_done(t)
         if t.on_complete:
             t.on_complete(t)
 
@@ -319,15 +327,26 @@ class Router:
             notify_hops[t.src] = max(notify_hops.get(t.src, 0), hops)
             delay = max(1, hops) * self.notify_latency_s
             self.net.engine.schedule(delay, lambda tr=t: self._reroute(tr))
-        return {
+        stats = {
             "affected_transfers": len(hit),
             "notified_sources": len(notify_hops),
             "max_notify_hops": max(notify_hops.values(), default=0),
         }
+        if self.net.telemetry is not None:
+            self.net.telemetry.record_instant(
+                "link_failures", {"link": [u, v], **stats}
+            )
+        return stats
 
     def _reroute(self, t: Transfer) -> None:
         if t.done:
             return
+        if self.net.telemetry is not None:
+            self.net.telemetry.record_instant(
+                "reroutes",
+                {"tid": t.tid, "src": t.src, "dst": t.dst,
+                 "remaining": t.remaining},
+            )
         left = self._withdraw(t)
         if left <= _EPS:
             self._finish(t)

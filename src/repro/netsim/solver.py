@@ -60,6 +60,9 @@ class ReferenceMaxMinSolver:
 
     def __init__(self, net: "FluidNetwork") -> None:
         self.net = net
+        # fid -> bottleneck constraint from the latest solve (telemetry);
+        # None while no telemetry recorder is attached
+        self.last_attribution: dict[int, Hashable] | None = None
 
     # incremental notifications are no-ops for the stateless reference
     def flow_added(self, flow: "Flow") -> None:
@@ -74,6 +77,8 @@ class ReferenceMaxMinSolver:
     def solve(self) -> list["Flow"]:
         """Set ``f.rate`` for every active flow; return the flowing ones."""
         net = self.net
+        rec = net.telemetry is not None
+        attr: dict[int, Hashable] | None = {} if rec else None
         active = [net.flows[k] for k in sorted(net.flows)]
         for f in active:
             f.rate = 0.0
@@ -100,6 +105,17 @@ class ReferenceMaxMinSolver:
             if not math.isfinite(best):
                 break
             level = best * (1 + LEVEL_RTOL)
+            if rec:
+                # round-start freeze level set: these are the constraints
+                # that pin every flow frozen this round (round snapshot ==
+                # sequential, see module docstring), so the canonical
+                # attribution — min key among a flow's at-level
+                # constraints — is solver-independent
+                level_set = {
+                    l
+                    for l, c in count.items()
+                    if c > 0 and residual[l] / c <= level
+                }
             for l in list(count):
                 if count[l] <= 0 or residual[l] / count[l] > level:
                     continue
@@ -109,9 +125,13 @@ class ReferenceMaxMinSolver:
                     f.rate = best
                     frozen.add(f.fid)
                     n_left -= 1
+                    if rec:
+                        cands = level_set.intersection(f.constraints)
+                        attr[f.fid] = min(cands) if cands else l
                     for fl in f.constraints:
                         residual[fl] = max(0.0, residual[fl] - best)
                         count[fl] -= 1
+        self.last_attribution = attr
         return [f for f in active if f.rate > 0.0]
 
 
@@ -153,6 +173,8 @@ class VectorizedMaxMinSolver:
         self._indices: np.ndarray = np.empty(0, dtype=np.int64)
         self._weights: np.ndarray = np.empty(0)
         self._row_of_nnz: np.ndarray = np.empty(0, dtype=np.int64)
+        # fid -> bottleneck constraint from the latest solve (telemetry)
+        self.last_attribution: dict[int, Hashable] | None = None
 
     # -- incremental incidence maintenance ---------------------------------
     def _col_of(self, key: Hashable) -> int:
@@ -238,7 +260,9 @@ class VectorizedMaxMinSolver:
     def solve(self) -> list["Flow"]:
         net = self.net
         flows = net.flows
+        rec = net.telemetry is not None
         if not flows:
+            self.last_attribution = {} if rec else None
             return []
         if self._cap_dirty:
             self._build_cap()
@@ -256,6 +280,7 @@ class VectorizedMaxMinSolver:
         residual = self._cap[:n_l].copy()
         rate = np.zeros(n_g)
         frozen = np.zeros(n_g, dtype=bool)
+        slot_attr: dict[int, Hashable] = {}
         n_left = n_g
         while n_left > 0:
             with np.errstate(divide="ignore", invalid="ignore"):
@@ -273,6 +298,21 @@ class VectorizedMaxMinSolver:
             rate[new] = best
             frozen |= new
             n_left -= int(new.sum())
+            if rec:
+                # canonical bottleneck per newly frozen group: min key
+                # among the group's constraints sitting at this round's
+                # freeze level (matches the reference solver's round-start
+                # level set — same arithmetic, same tuple ordering)
+                keys = self._keys
+                indptr = self._indptr
+                indices = self._indices
+                for row in np.nonzero(new)[0]:
+                    cols = indices[indptr[row]:indptr[row + 1]]
+                    cands = cols[at_level[cols]]
+                    pick = cands if cands.size else cols
+                    slot_attr[int(self._rows[row])] = min(
+                        keys[c] for c in pick
+                    )
             sel = new[self._row_of_nnz]
             np.add.at(residual, self._indices[sel], -best * wt[sel])
             np.add.at(count, self._indices[sel], -wt[sel])
@@ -284,6 +324,19 @@ class VectorizedMaxMinSolver:
         rates = slot_rate.tolist()
         slot_of = self._slot_of
         flowing = []
+        if rec:
+            attr: dict[int, Hashable] = {}
+            for f in flows.values():
+                slot = slot_of[f.fid]
+                r = rates[slot]
+                f.rate = r
+                if r > 0.0:
+                    flowing.append(f)
+                key = slot_attr.get(slot)
+                if key is not None:
+                    attr[f.fid] = key
+            self.last_attribution = attr
+            return flowing
         for f in flows.values():
             r = rates[slot_of[f.fid]]
             f.rate = r

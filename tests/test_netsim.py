@@ -25,8 +25,10 @@ from repro.netsim import (
     FluidNetwork,
     NetSim,
     Router,
+    Telemetry,
     hotspot_dag,
     ring_allreduce,
+    trunk_congestion,
 )
 from repro.netsim.collectives import clique_nodes, hierarchical_allreduce
 from repro.netsim.scenarios import inter_rack_mesh as mesh_2d
@@ -424,3 +426,165 @@ class TestWorkloadRun:
         over = simulate(w, p, AnalyticPerfModel(comm, axis_gbs=cal))
         # calibrated bandwidth <= idealized analytic => no faster iteration
         assert over.iteration_s >= base.iteration_s * 0.999
+
+
+class TestScenarios:
+    def test_trunk_congestion_geometry(self):
+        sc = trunk_congestion()
+        src = sc.topo.node_id((0, 0))
+        assert sc.hot_link == (src, sc.topo.node_id((1, 0)))
+        assert len(sc.dag.tasks) == 3
+        # never sends to (1, 0) directly: the trunk is only ever a relay
+        dsts = {t.dst for t in sc.dag.tasks}
+        assert sc.hot_link[1] not in dsts
+        assert all(t.src == src for t in sc.dag.tasks)
+        assert sc.rx_gbs == pytest.approx(sc.topo.dims[0].gbs_per_peer / 2)
+
+    def test_trunk_congestion_validates_geometry(self):
+        with pytest.raises(ValueError):
+            trunk_congestion(z=1)
+        with pytest.raises(ValueError):
+            trunk_congestion(a=4, fan=4)     # fan must leave (1,0) alone
+
+    def test_shortest_saturates_trunk_and_attribution_names_it(self):
+        sc = trunk_congestion()
+        sim = NetSim(
+            sc.topo, routing=Routing.SHORTEST, rx_gbs=sc.rx_gbs,
+            telemetry=True,
+        )
+        res = sim.run_dag(sc.dag)
+        assert res.incomplete == 0
+        tel = res.telemetry
+        assert tel.peak_utilization(sc.hot_link) == pytest.approx(1.0)
+        # every flow rides the trunk and the solver blames it, not rx
+        assert set(tel.flow_bottlenecks().values()) == {sc.hot_link}
+
+    def test_borrow_relieves_trunk(self):
+        sc = trunk_congestion()
+        peaks = {}
+        for pol in (Routing.SHORTEST, Routing.BORROW):
+            sim = NetSim(
+                sc.topo, routing=pol, rx_gbs=sc.rx_gbs, telemetry=True
+            )
+            res = sim.run_dag(sc.dag)
+            assert res.incomplete == 0
+            peaks[pol] = res.telemetry.peak_utilization(sc.hot_link)
+        assert peaks[Routing.BORROW] < peaks[Routing.SHORTEST] - 0.2
+
+
+class TestTelemetry:
+    def test_disabled_by_default_and_zero_cost(self):
+        topo = ub_mesh_rack()
+        sim = NetSim(topo, routing=Routing.DETOUR)
+        res = sim.run_dag(ring_allreduce(topo, clique_nodes(topo, 0), 8e6))
+        assert res.telemetry is None
+        assert sim.last_telemetry is None
+        net = sim.last_network
+        assert net.telemetry is None
+        # the solver skips attribution work entirely when nobody listens
+        assert net.solver.last_attribution is None
+
+    def test_timeline_integral_matches_byte_ledger(self):
+        topo = mesh_2d()
+        tel = Telemetry()
+        net = FluidNetwork(topo, telemetry=tel)
+        router = Router(net, Routing.DETOUR)
+        for t in hotspot_dag(topo).tasks:
+            router.send(t.src, t.dst, t.size)
+        net.run()
+        assert net.link_bytes, "scenario must use links"
+        for link, b in net.link_bytes.items():
+            assert tel.link_bytes(link) == pytest.approx(b, rel=1e-6)
+        # and links the ledger never saw are absent from the series too
+        assert set(tel.link_series) <= set(net.link_bytes)
+
+    def test_summary_schema_and_byte_audit(self):
+        sc = trunk_congestion()
+        sim = NetSim(
+            sc.topo, routing=Routing.DETOUR, rx_gbs=sc.rx_gbs, telemetry=True
+        )
+        res = sim.run_dag(sc.dag)
+        s = res.telemetry.summary()
+        assert set(s) == {
+            "duration_s", "events", "solver_samples", "links",
+            "bottlenecks", "flows", "router",
+        }
+        assert s["duration_s"] == pytest.approx(res.makespan_s)
+        assert s["solver_samples"] > 0
+        assert s["links"]["top"] and "peak_util" in s["links"]["top"][0]
+        assert set(s["links"]["per_dim"]) <= {"Z", "A"}
+        f = s["flows"]
+        # congestion re-splits withdraw subflows and relaunch the
+        # remainder, so launched = completed + withdrawn — and the byte
+        # audit still closes over the withdrawn-unsent bucket
+        assert f["launched"] == f["completed"] + f["withdrawn"]
+        assert f["bytes_delivered"] + f["bytes_withdrawn_unsent"] == (
+            pytest.approx(f["bytes_requested"])
+        )
+        assert abs(f["stranded_bytes"]) < 1.0
+        # detour throttles on the rx cap: the class accounting must see it
+        assert s["bottlenecks"]["by_class"].get("rx", 0.0) > 0.0
+
+    def test_perfetto_export_is_valid_trace_json(self, tmp_path):
+        import json
+
+        sc = trunk_congestion()
+        sim = NetSim(
+            sc.topo, routing=Routing.BORROW, rx_gbs=sc.rx_gbs, telemetry=True
+        )
+        res = sim.run_dag(sc.dag)
+        path = tmp_path / "trace.json"
+        trace = res.telemetry.to_perfetto(str(path))
+        on_disk = json.loads(path.read_text())
+        assert on_disk == trace
+        evs = trace["traceEvents"]
+        phases = {e["ph"] for e in evs}
+        assert {"M", "C", "X", "b", "e"} <= phases
+        assert all(
+            e["ts"] >= 0 for e in evs if "ts" in e
+        )
+        # async transfer spans pair up per id
+        b_ids = sorted(e["id"] for e in evs if e["ph"] == "b")
+        e_ids = sorted(e["id"] for e in evs if e["ph"] == "e")
+        assert b_ids == e_ids and len(b_ids) == len(sc.dag.tasks)
+        # counter samples never exceed capacity
+        assert all(
+            0.0 <= e["args"]["util"] <= 1.0 + 1e-9
+            for e in evs if e["ph"] == "C"
+        )
+
+    def test_failure_instants_and_reroute_counters(self):
+        topo = ub_mesh_rack()
+        nodes = clique_nodes(topo, 0)
+        dag = ring_allreduce(topo, nodes, 32e6)
+        sim = NetSim(topo, routing=Routing.DETOUR, telemetry=True)
+        healthy = sim.run_dag(dag)
+        failed = sim.run_dag(
+            dag,
+            fail_link=(nodes[0], nodes[1]),
+            fail_at_s=healthy.makespan_s / 3,
+        )
+        assert failed.incomplete == 0
+        tel = failed.telemetry
+        assert tel is not healthy.telemetry     # fresh recorder per run
+        c = tel.router_counters
+        assert c["link_failures"] == 1
+        assert c["reroutes"] >= 1
+        names = [name for _, name, _ in tel.instants]
+        assert "link_failures" in names and "reroutes" in names
+        t_fail = next(
+            t for t, name, _ in tel.instants if name == "link_failures"
+        )
+        assert t_fail == pytest.approx(healthy.makespan_s / 3)
+        # withdrawn flows keep the byte audit closed
+        f = tel.summary()["flows"]
+        assert f["withdrawn"] >= 1
+        assert f["bytes_delivered"] + f["bytes_withdrawn_unsent"] == (
+            pytest.approx(f["bytes_requested"])
+        )
+
+    def test_one_recorder_per_network(self):
+        tel = Telemetry()
+        FluidNetwork(ub_mesh_rack(), telemetry=tel)
+        with pytest.raises(ValueError):
+            FluidNetwork(ub_mesh_rack(), telemetry=tel)

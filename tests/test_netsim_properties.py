@@ -17,7 +17,12 @@ solvers (vectorized numpy water-filling and the pure-Python reference):
     sum(size x links crossed) including aggregate multiplicity;
 (e) **aggregate equivalence** — a symmetric ring step executed as one
     weighted aggregate flow completes exactly when its member-by-member
-    expansion does.
+    expansion does;
+(f) **telemetry parity** — with a ``Telemetry`` recorder attached, the
+    vectorized and reference solvers emit identical bottleneck
+    attributions (final constraint per flow AND the full dedup'd history),
+    and every link's recorded utilization timeline integrates to exactly
+    the fluid network's byte ledger for that link.
 
 Two drivers share the same checkers: a seeded corpus that always runs
 (``TestSeededInvariants``) and hypothesis-driven exploration
@@ -38,7 +43,7 @@ from repro.core.topology import (
     NDFullMesh,
     PASSIVE_ELECTRICAL,
 )
-from repro.netsim import FluidNetwork
+from repro.netsim import FluidNetwork, Telemetry
 from repro.netsim.collectives import clique_nodes
 
 CAP_MODES = ("none", "rx", "io", "rx+io")
@@ -187,6 +192,44 @@ def check_conservation(net, flows) -> None:
     assert ledger == pytest.approx(wire, rel=1e-6)
 
 
+def _check_telemetry_parity(seed: int, caps: str) -> None:
+    """Both solvers, recorded end-to-end: identical attributions and
+    byte-conserving link timelines."""
+    topo, rx, dim_io, paths, aggs = _scenario(seed, caps)
+    if not paths and not aggs:
+        pytest.skip("degenerate scenario")
+    tels: dict[str, Telemetry] = {}
+    nets: dict[str, FluidNetwork] = {}
+    for solver in SOLVERS:
+        tel = Telemetry()
+        net = FluidNetwork(
+            topo, rx_gbs=rx, dim_io_gbs=dim_io, solver=solver, telemetry=tel
+        )
+        for p, s in paths:
+            net.add_flow(p, s)
+        for pairs, s in aggs:
+            net.add_aggregate_flow(pairs, s)
+        net.run()
+        tels[solver], nets[solver] = tel, net
+    tv, tr = tels["vectorized"], tels["reference"]
+    # identical final attribution per flow (exact key equality: both
+    # solvers apply the same canonical min-key-at-freeze-level rule)
+    assert tv.flow_bottlenecks() == tr.flow_bottlenecks()
+    # ... and the full attribution history (dedup'd key sequence)
+    for fid, trace_v in tv.flow_traces.items():
+        hist_v = [k for _, k in trace_v.bottlenecks]
+        hist_r = [k for _, k in tr.flow_traces[fid].bottlenecks]
+        assert hist_v == hist_r, f"flow {fid}: {hist_v} != {hist_r}"
+    # timeline integral == byte ledger, per link, per solver
+    for solver in SOLVERS:
+        net, tel = nets[solver], tels[solver]
+        assert set(tel.link_series) <= set(net.link_bytes)
+        for link, b in net.link_bytes.items():
+            assert tel.link_bytes(link) == pytest.approx(b, rel=1e-6), (
+                f"{solver} link {link}: timeline != ledger"
+            )
+
+
 def _run_invariant(seed: int, caps: str, solver: str, which: str) -> None:
     topo, rx, dim_io, paths, aggs = _scenario(seed, caps)
     if not paths and not aggs:
@@ -265,6 +308,9 @@ class TestSeededInvariants:
         for solver in SOLVERS:
             _check_aggregate_equivalence(seed, caps, solver)
 
+    def test_telemetry_parity(self, seed, caps):
+        _check_telemetry_parity(seed, caps)
+
 
 # ---------------------------------------------------------------------------
 # hypothesis exploration — same checkers, generated seeds/cap modes
@@ -300,3 +346,8 @@ class TestHypothesisInvariants:
     def test_aggregate_equivalence(self, seed, caps):
         for solver in SOLVERS:
             _check_aggregate_equivalence(seed, caps, solver)
+
+    @given(seed=st.integers(0, 10**6), caps=st.sampled_from(CAP_MODES))
+    @settings(max_examples=10)
+    def test_telemetry_parity(self, seed, caps):
+        _check_telemetry_parity(seed, caps)
