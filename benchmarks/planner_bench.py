@@ -68,9 +68,14 @@ def planner_backends():
         for exc, n in sorted(rn.skipped.items()):
             derived[f"{name}/skipped:{exc}"] = n
         derived[f"{name}/plan_wall_s"] = round(rn.wall_s, 3)
+        derived[f"{name}/specs_per_s"] = (
+            round(rn.n_enumerated / rn.wall_s, 1) if rn.wall_s > 0 else 0.0
+        )
+        derived[f"{name}/n_prefiltered"] = rn.n_prefiltered
         cal = rn.calibration
         derived[f"{name}/cal_hits"] = cal.get("hits", 0)
         derived[f"{name}/cal_misses"] = cal.get("misses", 0)
+        derived[f"{name}/cal_disk_hits"] = cal.get("disk_hits", 0)
         derived[f"{name}/cal_measure_s"] = round(cal.get("measure_s", 0.0), 3)
     # shape-awareness flip: same netsim backend, AllReduce proxy vs profile
     proxy = NetsimPerfModel(

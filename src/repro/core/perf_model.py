@@ -121,6 +121,10 @@ def _topo_key(topo: NDFullMesh) -> tuple:
 # — the same key appears once whether the planner scores 10 specs or 1000
 _CALIBRATION_CACHE: dict[tuple, float] = {}
 
+# persistent-store handles per resolved cache directory (shares the
+# corrupt-file warn-once bookkeeping across NetsimPerfModel instances)
+_DISK_CACHES: dict[str, object] = {}
+
 # running memo-effectiveness counters, cumulative since import (or the last
 # ``reset_calibration_stats``).  ``per_key_s`` keeps the netsim wall cost of
 # each (axis, shape, width) actually measured — the observability hook that
@@ -128,6 +132,7 @@ _CALIBRATION_CACHE: dict[tuple, float] = {}
 _CALIBRATION_STATS: dict = {
     "hits": 0,
     "misses": 0,
+    "disk_hits": 0,
     "measure_s": 0.0,
     "per_key_s": {},
 }
@@ -135,12 +140,16 @@ _CALIBRATION_STATS: dict = {
 
 def calibration_stats() -> dict:
     """Snapshot of the shared calibration-memo counters: ``hits`` /
-    ``misses`` (cache lookups by ``_calibrate``), ``measure_s`` (total
-    netsim wall seconds spent measuring), and ``per_key_s`` mapping each
-    measured ``(axis, shape, width)`` to its wall cost."""
+    ``misses`` (in-memory memo lookups by ``_calibrate``), ``disk_hits``
+    (misses served by the persistent ``core.calib_cache`` store instead
+    of a netsim run), ``measure_s`` (total netsim wall seconds spent
+    measuring), and ``per_key_s`` mapping each measured ``(axis, shape,
+    width)`` to its wall cost (batched measurements split their batch
+    wall time evenly across the batch's keys)."""
     return {
         "hits": _CALIBRATION_STATS["hits"],
         "misses": _CALIBRATION_STATS["misses"],
+        "disk_hits": _CALIBRATION_STATS["disk_hits"],
         "measure_s": _CALIBRATION_STATS["measure_s"],
         "per_key_s": dict(_CALIBRATION_STATS["per_key_s"]),
     }
@@ -148,7 +157,7 @@ def calibration_stats() -> dict:
 
 def reset_calibration_stats() -> None:
     """Zero the memo counters (the cache itself is untouched)."""
-    _CALIBRATION_STATS.update(hits=0, misses=0, measure_s=0.0)
+    _CALIBRATION_STATS.update(hits=0, misses=0, disk_hits=0, measure_s=0.0)
     _CALIBRATION_STATS["per_key_s"] = {}
 
 
@@ -218,6 +227,17 @@ class NetsimPerfModel:
     coarsen_level: str = "rack"
     detail_racks: tuple[int, ...] = ()
     background_bytes: float | None = None
+    # persistent calibration cache directory: "auto" resolves
+    # $CALIB_CACHE_DIR / ~/.cache (core/calib_cache.py), an explicit path
+    # pins it, None disables disk persistence entirely
+    cache_dir: "str | None" = "auto"
+    # how many independent chip-level calibration DAGs share one netsim
+    # solver session (NetSim.measure_profile_batch); 1 = sequential
+    batch_size: int = 4
+    # False rebuilds the FluidNetwork wire structure from scratch on every
+    # measurement session (the pre-template-cache behavior) — the per-spec
+    # baseline leg of benchmarks/netsim_scale.netsim_planner_throughput
+    reuse_wire_template: bool = True
 
     def __post_init__(self) -> None:
         if self.detail_racks and self.superpod is None:
@@ -234,17 +254,9 @@ class NetsimPerfModel:
         return "netsim"
 
     # -- calibration (memoized) -------------------------------------------
-    def _calibrate(
-        self, widths: dict[tuple[str, str], int | None]
-    ) -> dict[tuple[str, str], float]:
-        """(axis, shape) -> measured GB/s for the requested group widths,
-        via the shared cross-instance cache; ``reduce_scatter`` aliases
-        the ``all_gather`` measurement (same wire schedule).  "pod"-axis
-        entries are measured on the rack-coarsened SuperPod mesh; their
-        cache key carries the coarsening level and the SuperPod geometry
-        instead of the chip-level topology key."""
-        from ..netsim import NetSim  # deferred: core must not hard-require netsim
-
+    def _tags(self) -> tuple[tuple, tuple, tuple, float]:
+        """(key_base, coarse_tag, detail_tag, bg_bytes) — everything that
+        pins a measurement besides the (axis, shape, width) request."""
         key_base = (
             _topo_key(self.topo),
             self.base.routing.value,
@@ -265,7 +277,6 @@ class NetsimPerfModel:
                 self.superpod.uplink_lanes_per_rack,
                 _topo_key(self.superpod.pod),
             )
-
         detail_tag = ()
         bg_bytes = (
             self.size_bytes if self.background_bytes is None
@@ -276,6 +287,58 @@ class NetsimPerfModel:
             # embedded racks AND the background payload so isolated and
             # interference-priced measurements never alias
             detail_tag = ("detail", tuple(self.detail_racks), bg_bytes)
+        return key_base, coarse_tag, detail_tag, bg_bytes
+
+    def _store_kind(self, axis: str, detail_tag: tuple) -> str:
+        """Which persistent-cache file an axis' measurements live in —
+        mirrors the in-memory key composition exactly."""
+        if axis == "pod":
+            return "pod"
+        if axis == "model" and detail_tag:
+            return "mixed"
+        return "chip"
+
+    def _disk_cache(self) -> "object | None":
+        if self.cache_dir is None:
+            return None
+        from .calib_cache import CalibCache, default_cache_dir
+
+        d = (
+            default_cache_dir() if self.cache_dir == "auto"
+            else self.cache_dir
+        )
+        cache = _DISK_CACHES.get(str(d))
+        if cache is None:
+            cache = _DISK_CACHES[str(d)] = CalibCache(d)
+        return cache
+
+    def _calibrate(
+        self, widths: dict[tuple[str, str], int | None]
+    ) -> dict[tuple[str, str], float]:
+        """(axis, shape) -> measured GB/s for the requested group widths,
+        via the shared cross-instance memo (and the persistent disk store
+        when enabled); ``reduce_scatter`` aliases the ``all_gather``
+        measurement (same wire schedule)."""
+        triples = [(a, s, w) for (a, s), w in widths.items()]
+        vals = self._calibrate_keys(triples)
+        return {(a, s): vals[(a, s, w)] for (a, s), w in widths.items()}
+
+    def _calibrate_keys(
+        self, triples: "list[tuple[str, str, int | None]]"
+    ) -> "dict[tuple[str, str, int | None], float]":
+        """Measured GB/s per ``(axis, shape, width)`` triple.
+
+        Resolution order per key: in-memory memo -> persistent disk store
+        (``core/calib_cache.py``) -> netsim measurement.  Chip-level
+        misses are measured in batched solver sessions
+        (``NetSim.measure_profile_batch``); "pod"-axis entries on the
+        rack-coarsened SuperPod mesh and mixed-granularity model entries
+        on the embedded-rack mesh, one run each (their cache keys carry
+        the coarsening / detail tags so granularities never alias).
+        Newly measured values are written back to the disk store."""
+        from ..netsim import NetSim  # deferred: core must not hard-require netsim
+
+        key_base, coarse_tag, detail_tag, bg_bytes = self._tags()
 
         def key(axis: str, shape: str, w: int | None) -> tuple:
             if shape == "reduce_scatter":
@@ -287,44 +350,75 @@ class NetsimPerfModel:
             return key_base + (axis, shape, w)
 
         missing = {
-            (axis, shape): w
-            for (axis, shape), w in widths.items()
+            (axis, shape, w)
+            for axis, shape, w in triples
             if key(axis, shape, w) not in _CALIBRATION_CACHE
         }
-        _CALIBRATION_STATS["hits"] += len(widths) - len(missing)
+        _CALIBRATION_STATS["hits"] += len(triples) - len(missing)
         _CALIBRATION_STATS["misses"] += len(missing)
-        pod_missing = {k: w for k, w in missing.items() if k[0] == "pod"}
-        mixed_missing = {
-            k: w for k, w in missing.items()
-            if k[0] == "model" and detail_tag
+
+        # persistent read-through: serve misses from the on-disk profile
+        disk = self._disk_cache() if missing else None
+        store_configs = {
+            "chip": list(key_base),
+            "pod": list(key_base + coarse_tag),
+            "mixed": list(key_base + coarse_tag + detail_tag),
         }
-        chip_missing = {
-            k: w for k, w in missing.items()
-            if k[0] != "pod" and k not in mixed_missing
-        }
-        if chip_missing:
+        if disk is not None:
+            stored: dict[str, dict] = {}
+            for axis, shape, w in list(missing):
+                kind = self._store_kind(axis, detail_tag)
+                if kind not in stored:
+                    stored[kind] = disk.get_profile(store_configs[kind])
+                mshape = "all_gather" if shape == "reduce_scatter" else shape
+                v = stored[kind].get((axis, mshape, w))
+                if v is not None:
+                    _CALIBRATION_CACHE[key(axis, shape, w)] = v
+                    _CALIBRATION_STATS["disk_hits"] += 1
+                    missing.discard((axis, shape, w))
+
+        # de-alias and de-duplicate what still needs a netsim run: the
+        # reduce_scatter/all_gather pair must measure ONCE, not twice
+        to_measure: dict[tuple[str, str, int | None], str] = {}
+        for axis, shape, w in sorted(missing, key=str):
+            mshape = "all_gather" if shape == "reduce_scatter" else shape
+            kind = self._store_kind(axis, detail_tag)
+            to_measure.setdefault((axis, mshape, w), kind)
+
+        new_by_kind: dict[str, dict] = {}
+
+        def store(axis: str, mshape: str, w: int | None, kind: str,
+                  gbs: "float | None") -> None:
+            # shapes netsim could not measure fall back to the analytic bw
+            val = (
+                gbs if gbs is not None
+                else self.base.axes[axis].gbs_per_chip
+            )
+            _CALIBRATION_CACHE[key(axis, mshape, w)] = val
+            new_by_kind.setdefault(kind, {})[(axis, mshape, w)] = val
+
+        chip_keys = [k for k, kind in to_measure.items() if kind == "chip"]
+        if chip_keys:
             sim = NetSim(
                 self.topo,
                 routing=self.base.routing,
                 latency_s=self.latency_s,
                 rx_gbs=self.rx_gbs,
+                reuse_wire_template=self.reuse_wire_template,
             )
-            for (axis, shape), w in chip_missing.items():
-                mshape = "all_gather" if shape == "reduce_scatter" else shape
-                t0 = time.perf_counter()
-                cal = sim.calibrated_profile(
-                    self.size_bytes,
-                    comm=self.base,
-                    widths={} if w is None else {axis: w},
-                    axes=(axis,),
-                    shapes=(mshape,),
-                )
-                _record_measurement(axis, shape, w, time.perf_counter() - t0)
-                # shapes netsim could not measure fall back to the analytic bw
-                _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
-                    axis, mshape, self.base.axes[axis].gbs_per_chip
-                )
-        if pod_missing:
+            t0 = time.perf_counter()
+            measured = sim.measure_profile_batch(
+                self.size_bytes,
+                chip_keys,
+                comm=self.base,
+                batch_size=max(1, self.batch_size),
+            )
+            dt = (time.perf_counter() - t0) / len(chip_keys)
+            for axis, mshape, w in chip_keys:
+                _record_measurement(axis, mshape, w, dt)
+                store(axis, mshape, w, "chip", measured[(axis, mshape, w)])
+        pod_keys = [k for k, kind in to_measure.items() if kind == "pod"]
+        if pod_keys:
             from ..netsim.coarsen import (
                 coarse_calibrated_profile,
                 coarse_netsim,
@@ -338,8 +432,7 @@ class NetsimPerfModel:
                 latency_s=self.latency_s,
                 rx_gbs=self.rx_gbs,
             )
-            for (axis, shape), w in pod_missing.items():
-                mshape = "all_gather" if shape == "reduce_scatter" else shape
+            for axis, mshape, w in pod_keys:
                 t0 = time.perf_counter()
                 cal = coarse_calibrated_profile(
                     cm,
@@ -350,11 +443,10 @@ class NetsimPerfModel:
                     shapes=(mshape,),
                     sim=csim,
                 )
-                _record_measurement(axis, shape, w, time.perf_counter() - t0)
-                _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
-                    axis, mshape, self.base.axes[axis].gbs_per_chip
-                )
-        if mixed_missing:
+                _record_measurement(axis, mshape, w, time.perf_counter() - t0)
+                store(axis, mshape, w, "pod", cal.gbs.get((axis, mshape)))
+        mixed_keys = [k for k, kind in to_measure.items() if kind == "mixed"]
+        if mixed_keys:
             from ..netsim.coarsen import (
                 coarsen_superpod,
                 mixed_calibrated_profile,
@@ -372,8 +464,7 @@ class NetsimPerfModel:
                 latency_s=self.latency_s,
                 rx_gbs=self.rx_gbs,
             )
-            for (axis, shape), w in mixed_missing.items():
-                mshape = "all_gather" if shape == "reduce_scatter" else shape
+            for axis, mshape, w in mixed_keys:
                 t0 = time.perf_counter()
                 cal = mixed_calibrated_profile(
                     cm,
@@ -385,13 +476,51 @@ class NetsimPerfModel:
                     background_per_chip_bytes=bg_bytes,
                     sim=msim,
                 )
-                _record_measurement(axis, shape, w, time.perf_counter() - t0)
-                _CALIBRATION_CACHE[key(axis, shape, w)] = cal.get(
-                    axis, mshape, self.base.axes[axis].gbs_per_chip
-                )
+                _record_measurement(axis, mshape, w, time.perf_counter() - t0)
+                store(axis, mshape, w, "mixed", cal.gbs.get((axis, mshape)))
+
+        # persistent write-back (best-effort; never raises into planning)
+        if new_by_kind and disk is not None:
+            for kind, entries in new_by_kind.items():
+                disk.update(store_configs[kind], entries)
+
         return {
-            (axis, shape): _CALIBRATION_CACHE[key(axis, shape, w)]
-            for (axis, shape), w in widths.items()
+            (axis, shape, w): _CALIBRATION_CACHE[key(axis, shape, w)]
+            for axis, shape, w in triples
+        }
+
+    def precalibrate(
+        self, specs: "list[ParallelSpec] | tuple[ParallelSpec, ...]"
+    ) -> dict:
+        """Front-load every calibration key a spec set will need.
+
+        Collects the union of ``_widths(p)`` over ``specs`` (one dry pass,
+        no netsim work) and resolves all unique ``(axis, shape, width)``
+        keys at once — so the chip-level misses land in few batched
+        ``NetSim.run_dags`` sessions instead of one session per key, and a
+        sweep pays measurement exactly once up front.  ``plan()`` calls
+        this automatically for backends that expose it; standalone sweeps
+        can call it with ``enumerate_specs(...)`` output directly.
+
+        Returns ``{"keys": unique keys, "measured": netsim-measured,
+        "disk_hits": served from the persistent store, "wall_s": ...}``.
+        """
+        keys: set[tuple[str, str, int | None]] = set()
+        for p in specs:
+            keys.update(
+                (a, s, w) for (a, s), w in self._widths(p).items()
+            )
+        before = calibration_stats()
+        t0 = time.perf_counter()
+        if keys:
+            self._calibrate_keys(sorted(keys, key=str))
+        after = calibration_stats()
+        return {
+            "keys": len(keys),
+            "measured": after["misses"] - before["misses"]
+            - (after["disk_hits"] - before["disk_hits"]),
+            "disk_hits": after["disk_hits"] - before["disk_hits"],
+            "wall_s": time.perf_counter() - t0,
         }
 
     def _widths(

@@ -81,6 +81,162 @@ class PlanResult:
 
 
 @dataclass(frozen=True)
+class Prefilter:
+    """Tuning of the vectorized analytic pre-filter (see ``plan``).
+
+    ``keep_k`` specs with the best analytic iteration time always survive
+    (never fewer than the requested ``top_k``).  ``margin`` is the safety
+    factor on the analytic comm estimate that extends the survivor set:
+    every spec whose analytic time beats the best achievable time under a
+    ``margin``-fold bandwidth degradation also survives.  Because a
+    measured backend only ever prices comm at or *below* the analytic
+    bandwidth (``CalibrationProfile.apply(clamp=True)``), a spec whose
+    analytic time exceeds that cutoff cannot win unless measurement
+    degrades some bandwidth by more than ``margin`` — 5x covers the worst
+    observed analytic/netsim ratio (the relay-and-incast-priced A2A at
+    ~4.2x) with slack.
+    """
+
+    keep_k: int = 64
+    margin: float = 5.0
+
+
+def _prefilter_mask(
+    w: WorkloadSpec,
+    specs: list[ParallelSpec],
+    comm: CommModel,
+    *,
+    rack_size: int,
+    keep_k: int,
+    margin: float,
+):
+    """Boolean survivor mask over ``specs`` from the vectorized analytic
+    cost model.
+
+    Replicates ``analyze_traffic`` + ``simulate`` as numpy array ops over
+    the whole batch: every closed-form collective cost is linear in the
+    payload for a fixed ``CommModel`` (``c1 * bytes + c0``), so each
+    (axis, shape) needs one two-point probe and the per-spec composition
+    is pure arithmetic on the (tp, sp, pp, dp, ep, m) arrays.  Raises on
+    models the analytic composition cannot price (missing axes) — the
+    caller falls back to the unfiltered path."""
+    import numpy as np
+
+    from .simulator import OVERLAP, _compute_seconds
+
+    def lin(f) -> tuple[float, float]:
+        # closed forms return c1 * size + c0 for size > 0 (and 0 at 0)
+        s1, s2 = 1e6, 2e6
+        t1, t2 = f(s1), f(s2)
+        c1 = (t2 - t1) / (s2 - s1)
+        return c1, t1 - c1 * s1
+
+    cost = {
+        ("model", "allreduce"): lin(lambda s: comm.allreduce("model", s)),
+        ("model", "all_gather"): lin(lambda s: comm.all_gather("model", s)),
+        ("model", "all_to_all"): lin(lambda s: comm.all_to_all("model", s)),
+        ("data", "allreduce"): lin(lambda s: comm.allreduce("data", s)),
+        ("data", "all_gather"): lin(lambda s: comm.all_gather("data", s)),
+        ("data", "all_to_all"): lin(lambda s: comm.all_to_all("data", s)),
+        ("data", "p2p"): lin(lambda s: comm.p2p("data", s)),
+    }
+    dp_axes = ["data"] + (["pod"] if "pod" in comm.axes else [])
+    hier = lin(lambda s: comm.hierarchical_allreduce(dp_axes, s))
+
+    tp = np.array([p.tp for p in specs], dtype=np.int64)
+    sp = np.array([p.sp for p in specs], dtype=np.int64)
+    pp = np.array([p.pp for p in specs], dtype=np.int64)
+    dp = np.array([p.dp for p in specs], dtype=np.int64)
+    ep = np.array([p.ep for p in specs], dtype=np.int64)
+    m = np.array([p.microbatches for p in specs], dtype=np.int64)
+    buckets = np.array([p.grad_buckets for p in specs], dtype=np.int64)
+
+    def price(axis_local: str, shape: str, v, n):
+        c1l, c0l = cost[(axis_local, shape)]
+        t_local = np.where(n > 0, (c1l * v + c0l) * n, 0.0)
+        if axis_local == "model":       # TP/SP/EP spill to the data axis
+            c1s, c0s = cost[("data", shape)]
+            t_spill = np.where(n > 0, (c1s * v + c0s) * n, 0.0)
+            return (1.0 - spill) * t_local + spill * t_spill
+        return t_local
+
+    # ---- analyze_traffic, vectorized -------------------------------------
+    bpe = w.bytes_per_elem
+    L = w.n_layers
+    seqs = np.maximum(1, w.global_batch // dp)
+    s_loc = np.maximum(1, w.seq_len // sp)
+    tokens_mb = np.maximum(1, seqs * s_loc // m)
+    v_act = tokens_mb.astype(np.float64) * w.hidden * bpe
+
+    footprint = tp * sp
+    spill = np.where(
+        footprint > rack_size, 1.0 - rack_size / footprint, 0.0
+    )
+
+    comm_total = np.zeros(len(specs))
+    n_base = 4 * L * m
+    n_eff = np.maximum(1, n_base // pp)          # simulate's L/pp hosting
+    # TP: AllReduce on the model axis
+    comm_total += (
+        price("model", "allreduce", v_act, np.where(tp > 1, n_eff, 0))
+        * (1 - OVERLAP["TP"])
+    )
+    # SP: half-width re-gathers + full-width gathers
+    sp_mask = sp > 1
+    comm_total += (
+        price("model", "all_gather", v_act / 2, np.where(sp_mask, n_eff, 0))
+        + price(
+            "model", "all_gather", v_act,
+            np.where(sp_mask, np.maximum(1, (n_base // 3) // pp), 0),
+        )
+    ) * (1 - OVERLAP["SP"])
+    # EP: dispatch/combine A2A (ledger stores the per-peer chunk; the
+    # device-level payload per op is chunk * ep)
+    if w.n_experts > 0:
+        ep_mask = ep > 1
+        off = np.where(ep_mask, (ep - 1) / np.maximum(ep, 1), 0.0)
+        v_a2a = tokens_mb * w.topk * (w.hidden / tp) * bpe * off / np.maximum(ep, 1)
+        comm_total += (
+            price(
+                "model", "all_to_all", v_a2a * ep,
+                np.where(ep_mask, n_eff, 0),
+            )
+            * (1 - OVERLAP["EP"])
+        )
+    # PP: boundary activations on the data axis
+    comm_total += (
+        price("data", "p2p", v_act, np.where(pp > 1, 2 * m, 0))
+        * (1 - OVERLAP["PP"])
+    )
+    # DP: bucketed gradient AllReduce up the data(+pod) hierarchy
+    if w.n_experts > 0:
+        dense = w.params_total * (1 - w.moe_param_frac)
+        moe = w.params_total * w.moe_param_frac
+        p_local = dense / (tp * pp) + moe / (tp * pp * ep)
+    else:
+        p_local = w.params_total / (tp * pp)
+    v_grad = p_local * 4.0 / buckets
+    c1h, c0h = hier
+    comm_total += np.where(
+        dp > 1, (c1h * v_grad + c0h) * buckets, 0.0
+    ) * (1 - OVERLAP["DP"])
+
+    compute_s = _compute_seconds(w, specs[0])    # chips-invariant scalar
+    bubble_s = np.where(pp > 1, compute_s * (pp - 1) / np.maximum(m, 1), 0.0)
+    iteration = compute_s + comm_total + bubble_s
+
+    # survivors: the analytic top keep_k, plus everything that could still
+    # win under a margin-fold bandwidth degradation of the best candidate
+    cutoff = np.min(compute_s + bubble_s + margin * comm_total)
+    keep = iteration <= cutoff
+    if len(specs) > keep_k:
+        keep |= iteration <= np.partition(iteration, keep_k - 1)[keep_k - 1]
+    else:
+        keep[:] = True
+    return keep
+
+
+@dataclass(frozen=True)
 class PlanReport:
     """Ranked plan results plus the search's bookkeeping.
 
@@ -102,6 +258,7 @@ class PlanReport:
     skipped: dict[str, int] = field(default_factory=dict)
     wall_s: float = 0.0
     calibration: dict = field(default_factory=dict)
+    n_prefiltered: int = 0                     # culled by the analytic pre-filter
 
     @property
     def n_skipped(self) -> int:
@@ -172,6 +329,28 @@ def enumerate_specs(
     return specs
 
 
+def _prefilter_comm(perf: "PerfModel | CommModel") -> CommModel:
+    """The spec-invariant analytic model the pre-filter prices against.
+
+    For the netsim backend this is its analytic *base* (plus any pinned
+    axis overrides) — deliberately NOT ``comm_model(None)``, which would
+    trigger netsim measurement of the default widths before the filter
+    has trimmed the spec set.  Measured backends clamp at the analytic
+    bound, so the base is a true lower bound on what pricing will return
+    — exactly what the ``Prefilter.margin`` soundness argument needs.
+    Spec-invariant backends resolve ``comm_model(None)`` directly (cheap,
+    and identical to what final pricing uses)."""
+    base = getattr(perf, "base", None)
+    if getattr(perf, "backend", "") == "netsim" and isinstance(base, CommModel):
+        pinned = getattr(perf, "pinned", None) or {}
+        if pinned:
+            axes = dict(base.axes)
+            axes.update(pinned)
+            return CommModel(axes=axes, routing=base.routing)
+        return base
+    return perf.comm_model(None)
+
+
 def plan(
     w: WorkloadSpec,
     chips: int,
@@ -179,12 +358,35 @@ def plan(
     *,
     rack_size: int = 64,
     top_k: int = 5,
+    max_tp: int = 64,
+    microbatch_options: tuple[int, ...] = (1, 2, 4, 8, 13, 16, 32),
+    prefilter: "Prefilter | None" = Prefilter(),
+    precalibrate: bool = True,
 ) -> PlanReport:
     """Rank feasible specs by simulated iteration time (Step 2+3).
 
     ``perf`` is any ``core.perf_model.PerfModel`` backend (a plain
     ``CommModel`` is the analytic one); a ``NetsimPerfModel`` ranks specs
     on flow-level *measured* axis bandwidths instead of idealized ones.
+
+    ``max_tp`` / ``microbatch_options`` thread straight through to
+    ``enumerate_specs`` so callers can narrow the search space without
+    reimplementing the loop.
+
+    ``prefilter`` (default on) evaluates the analytic cost model as numpy
+    array ops over the whole spec batch and sends only the plausible
+    Pareto tail (``Prefilter.keep_k`` best plus a ``margin``-fold safety
+    band) to per-spec pricing — for a netsim backend that means far fewer
+    calibration keys to measure.  Pass ``prefilter=None`` to price every
+    feasible spec (the escape hatch; winner preservation of the default
+    against this path is pinned by tests on every bench config).  Models
+    the analytic composition cannot price (e.g. a missing axis) fall back
+    to the unfiltered path automatically, so skip accounting is unchanged.
+
+    ``precalibrate`` (default on) front-loads every calibration key the
+    surviving specs need through ``NetsimPerfModel.precalibrate`` — few
+    batched solver sessions instead of one per key — for backends that
+    expose it.
 
     Specs whose simulation raises (missing axis, degenerate bandwidth) are
     counted per exception type on ``PlanReport.skipped`` and summarized in
@@ -195,15 +397,41 @@ def plan(
 
     t_start = time.perf_counter()
     cal_before = calibration_stats()
+    specs = enumerate_specs(
+        w, chips, rack_size=rack_size, max_tp=max_tp,
+        microbatch_options=microbatch_options,
+    )
+    n_enumerated = len(specs)
+    feasible = [s for s in specs if memory_feasible(w, s)]
+    n_infeasible = n_enumerated - len(feasible)
+
+    survivors = feasible
+    n_prefiltered = 0
+    if prefilter is not None and len(feasible) > max(prefilter.keep_k, top_k):
+        try:
+            mask = _prefilter_mask(
+                w, feasible, _prefilter_comm(perf),
+                rack_size=rack_size,
+                keep_k=max(prefilter.keep_k, top_k),
+                margin=prefilter.margin,
+            )
+            survivors = [s for s, keep in zip(feasible, mask) if keep]
+            n_prefiltered = len(feasible) - len(survivors)
+        except Exception as e:  # unpriceable model: fall back to full search
+            log.debug(
+                "plan(%s): analytic prefilter disabled (%s: %s)",
+                w.name, type(e).__name__, e,
+            )
+            survivors = feasible
+
+    if precalibrate and survivors:
+        pre = getattr(perf, "precalibrate", None)
+        if pre is not None:
+            pre(survivors)
+
     results: list[PlanResult] = []
     skipped: dict[str, int] = {}
-    n_enumerated = 0
-    n_infeasible = 0
-    for spec in enumerate_specs(w, chips, rack_size=rack_size):
-        n_enumerated += 1
-        if not memory_feasible(w, spec):
-            n_infeasible += 1
-            continue
+    for spec in survivors:
         try:
             r = simulate(w, spec, perf, rack_size=rack_size)
         except (KeyError, ZeroDivisionError) as e:
@@ -228,6 +456,7 @@ def plan(
     calibration = {
         "hits": cal_after["hits"] - cal_before["hits"],
         "misses": cal_after["misses"] - cal_before["misses"],
+        "disk_hits": cal_after["disk_hits"] - cal_before["disk_hits"],
         "measure_s": cal_after["measure_s"] - cal_before["measure_s"],
         "per_key_s": {
             "{}/{}/{}".format(*k): dt - cal_before["per_key_s"].get(k, 0.0)
@@ -242,13 +471,24 @@ def plan(
         skipped=skipped,
         wall_s=time.perf_counter() - t_start,
         calibration=calibration,
+        n_prefiltered=n_prefiltered,
     )
 
 
 def best_parallel_spec(
-    w: WorkloadSpec, chips: int, perf: "PerfModel | CommModel", *, rack_size: int = 64
+    w: WorkloadSpec,
+    chips: int,
+    perf: "PerfModel | CommModel",
+    *,
+    rack_size: int = 64,
+    max_tp: int = 64,
+    microbatch_options: tuple[int, ...] = (1, 2, 4, 8, 13, 16, 32),
+    prefilter: "Prefilter | None" = Prefilter(),
 ) -> ParallelSpec:
-    ranked = plan(w, chips, perf, rack_size=rack_size, top_k=1)
+    ranked = plan(
+        w, chips, perf, rack_size=rack_size, top_k=1, max_tp=max_tp,
+        microbatch_options=microbatch_options, prefilter=prefilter,
+    )
     if not ranked:
         raise ValueError(f"no feasible parallelization for {w.name} on {chips} chips")
     return ranked[0].spec

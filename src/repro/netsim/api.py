@@ -45,6 +45,7 @@ from .collectives import (
     hierarchical_all_gather,
     hierarchical_allreduce,
     multipath_all_to_all,
+    remap_dag,
     ring_all_gather,
     ring_allreduce,
 )
@@ -174,6 +175,13 @@ class _DagRun:
                 self._launch(c)
 
 
+# bump whenever calibration *semantics* change — DAG builders, wire-byte
+# normalization, rx/IO-cap conventions — anything that can shift a measured
+# bandwidth without the topology or solver changing.  Part of the
+# persistent calibration cache key (core/calib_cache.py).
+CALIBRATION_SCHEMA_VERSION = 1
+
+
 class NetSim:
     """Flow-level discrete-event simulator of an nD-FullMesh network."""
 
@@ -192,6 +200,7 @@ class NetSim:
         aggregate: bool = True,
         axis_dims: dict[str, tuple[int, ...]] | None = None,
         telemetry: bool = False,
+        reuse_wire_template: bool = True,
     ) -> None:
         self.topo = topo or ub_mesh_pod()
         self.routing = routing
@@ -228,6 +237,10 @@ class NetSim:
         # attribution, router counters; exported via
         # NetSimResult.telemetry.summary()/to_perfetto())
         self.telemetry = telemetry
+        # False rebuilds the wire-capacity dicts per run instead of using
+        # the per-topology template cache (flows._WIRE_TEMPLATES) — only
+        # the throughput benchmark's pre-cache baseline wants this
+        self.reuse_wire_template = reuse_wire_template
         self.last_network: FluidNetwork | None = None   # post-run inspection
         self.last_telemetry: Telemetry | None = None
 
@@ -243,6 +256,7 @@ class NetSim:
             dim_io_gbs=self.dim_io_gbs,
             solver=self.solver,
             telemetry=tel,
+            reuse_wire_template=self.reuse_wire_template,
         )
         return Router(
             net,
@@ -618,3 +632,185 @@ class NetSim:
                 gbs[(axis, shape)] = wire / t / 1e9
             self._alias_reduce_scatter(gbs, axis, shapes)
         return CalibrationProfile(gbs=gbs)
+
+    # -- batched calibration ------------------------------------------------
+    def can_batch_calibration(self) -> bool:
+        """Whether independent calibration DAGs may share one solver
+        session by relocation to disjoint coordinate boxes.
+
+        Requires translation symmetry (homogeneous per-dim link capacities
+        and node caps) and box-confined routing.  Under SHORTEST/DETOUR,
+        every APR candidate path stays inside the src/dst coordinate box
+        (shortest paths permute the differing dims; detours relay through
+        a third member of the *same* clique), so DAGs whose boxes are
+        disjoint can never share a link, an rx port, or an IO port —
+        BORROW breaks this with its global switch plane."""
+        if self.routing == Routing.BORROW:
+            return False
+        if getattr(self.topo, "link_gbs", None) is not None:
+            return False                # heterogeneous link capacities
+        if isinstance(self.rx_gbs, dict):
+            return False                # per-node rx caps
+        if self.dim_io_gbs:
+            return False                # switched-tier IO caps
+        return True
+
+    def _dag_box(self, dag: FlowDAG) -> list[set[int]]:
+        """Per-dimension coordinate sets any flow of ``dag`` can touch.
+
+        Single-path tasks pin their direct links, so only the endpoints'
+        coordinates count; router-policy tasks may relay through any third
+        member of a differing dimension's clique (APR detour), so each
+        differing dim expands to its full range."""
+        shape = self.topo.shape
+        ndim = len(shape)
+        dims = range(ndim)
+        full = [set(range(s)) for s in shape]
+        box: list[set[int]] = [set() for _ in shape]
+        coords = self.topo.coords
+        cache: dict[int, tuple[int, ...]] = {}
+        for t in dag.tasks:
+            pairs = t.pairs if t.pairs else ((t.src, t.dst),)
+            single = t.single_path
+            for u, v in pairs:
+                cu = cache.get(u)
+                if cu is None:
+                    cu = cache[u] = coords(u)
+                cv = cache.get(v)
+                if cv is None:
+                    cv = cache[v] = coords(v)
+                for d in dims:
+                    box[d].add(cu[d])
+                    box[d].add(cv[d])
+                    if cu[d] != cv[d] and not single:
+                        box[d] |= full[d]
+        return box
+
+    def _place_dag(
+        self,
+        dag: FlowDAG,
+        box: list[set[int]],
+        placed: list[list[set[int]]],
+    ) -> "tuple[FlowDAG, list[set[int]]] | None":
+        """Translate ``dag`` so its box is disjoint from every ``placed``
+        box, or ``None`` when no translation fits.  Only dimensions the
+        DAG does not use (box == {0}, the builders' base-corner
+        convention) are offset; the identity placement is tried first, so
+        a batch of one reproduces the sequential run exactly."""
+        import itertools
+
+        shape = self.topo.shape
+        free = [d for d in range(len(shape)) if box[d] == {0}]
+        for offs in itertools.product(*(range(shape[d]) for d in free)):
+            tbox = [
+                {offs[free.index(d)]} if d in free else set(box[d])
+                for d in range(len(shape))
+            ]
+            ok = all(
+                any(not tbox[d] & pb[d] for d in range(len(shape)))
+                for pb in placed
+            )
+            if not ok:
+                continue
+            if not any(offs):
+                return dag, tbox
+            delta = {free[i]: offs[i] for i in range(len(free))}
+            coords, node_id = self.topo.coords, self.topo.node_id
+            cache: dict[int, int] = {}
+
+            def translate(n: int) -> int:
+                m = cache.get(n)
+                if m is None:
+                    c = list(coords(n))
+                    for d, o in delta.items():
+                        c[d] = o
+                    m = cache[n] = node_id(tuple(c))
+                return m
+
+            return remap_dag(dag, translate), tbox
+        return None
+
+    def measure_profile_batch(
+        self,
+        size_bytes: float,
+        requests: "list[tuple[str, str, int | None]]",
+        *,
+        comm: "CommModel | None" = None,
+        axis_sizes: dict[str, int] | None = None,
+        batch_size: int = 8,
+    ) -> "dict[tuple[str, str, int | None], float | None]":
+        """Measure many ``(axis, shape, width)`` calibration keys in few
+        solver sessions.
+
+        Each key's flow DAG is built exactly as :meth:`calibrated_profile`
+        would, then translated (``remap_dag``) into a disjoint coordinate
+        box of the same mesh — translation symmetry plus APR's
+        box-confinement (see :meth:`can_batch_calibration`) make the
+        concurrent DAGs provably non-interacting, so each measured
+        makespan equals its sequential value (to fp accumulation order).
+        Keys that cannot batch (no placement left, ``batch_size``
+        reached, or the NetSim configuration forbids it) run sequentially.
+        Returns measured GB/s per request (``None`` where the shape
+        yields no DAG on this topology — the caller's analytic-fallback
+        convention)."""
+        if axis_sizes is None and comm is not None:
+            axis_sizes = {k: a.size for k, a in comm.axes.items()}
+        sizes = axis_sizes or {"model": 16, "data": 16}
+        axis_dims = self._axis_dims_map(None)
+
+        out: "dict[tuple[str, str, int | None], float | None]" = {}
+        build: list[tuple[tuple[str, str, int | None], FlowDAG]] = []
+        for axis, shape, w in requests:
+            dims = axis_dims.get(axis)
+            dag = (
+                self._axis_shape_dag(
+                    dims, shape, size_bytes, w, tag=f"cal-{axis}-{shape}"
+                )
+                if dims is not None
+                else None
+            )
+            if dag is None or not dag.tasks:
+                out[(axis, shape, w)] = None
+                continue
+            build.append(((axis, shape, w), dag))
+
+        def finish(key, makespan: float) -> None:
+            axis, shape, _w = key
+            n = sizes.get(axis, 16)
+            wire = self._wire_fraction(shape, n) * size_bytes
+            out[key] = wire / makespan / 1e9 if makespan > 0 else None
+
+        if not self.can_batch_calibration():
+            for key, dag in build:
+                finish(key, self.run_dag(dag).makespan_s)
+            return out
+
+        # greedy first-fit packing into batches of relocated DAGs
+        batch: list[tuple[tuple[str, str, int | None], FlowDAG]] = []
+        boxes: list[list[set[int]]] = []
+
+        def flush() -> None:
+            if not batch:
+                return
+            for res, (key, _dag) in zip(
+                self.run_dags([dag for _k, dag in batch]), batch
+            ):
+                finish(key, res.makespan_s)
+            batch.clear()
+            boxes.clear()
+
+        for key, dag in build:
+            if len(batch) >= batch_size:
+                flush()
+            placed = self._place_dag(dag, self._dag_box(dag), boxes)
+            if placed is None:
+                flush()
+                placed = self._place_dag(dag, self._dag_box(dag), [])
+            if placed is None:          # does not fit even alone (cannot
+                finish(key, self.run_dag(dag).makespan_s)   # happen today)
+                continue
+            tdag, tbox = placed
+            batch.append((key, tdag))
+            boxes.append(tbox)
+        flush()
+        return out

@@ -59,6 +59,7 @@ Invariants maintained (and unit-tested):
 from __future__ import annotations
 
 import math
+import weakref
 from dataclasses import dataclass, field
 from typing import Callable, Hashable
 
@@ -124,6 +125,54 @@ class Flow:
         return self.size * self.multiplicity
 
 
+# wire-structure template cache: (capacity, link->dim) per topology.  The
+# two dicts are a pure function of the topology (links x per-dim or
+# per-link gbs), yet building them walks every directed link (~82k on a
+# 1024-chip pod) — which used to dominate FluidNetwork construction and
+# thereby the per-key cost of planner calibration (one fresh network per
+# measured key).  Keyed weakly on the topology object itself: value-hashed
+# frozen ``NDFullMesh`` instances share one template across equal meshes,
+# identity-hashed coarse/mixed meshes get one template each.  ``capacity``
+# is copied per network (callers mutate it: ``add_link``, failure tests);
+# ``_link_dim`` is read-only after construction and shared.
+_WIRE_TEMPLATES: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _build_wire_structure(
+    topo: NDFullMesh,
+) -> tuple[dict[DirectedLink, float], dict[DirectedLink, int]]:
+    capacity: dict[DirectedLink, float] = {}
+    link_dim: dict[DirectedLink, int] = {}
+    link_gbs = getattr(topo, "link_gbs", None)
+    for u, v, d in topo.links():
+        gbs = (
+            link_gbs(u, v) if link_gbs is not None
+            else topo.dims[d].gbs_per_peer
+        ) * 1e9
+        capacity[(u, v)] = gbs
+        capacity[(v, u)] = gbs
+        link_dim[(u, v)] = d
+        link_dim[(v, u)] = d
+    return capacity, link_dim
+
+
+def _wire_structure(
+    topo: NDFullMesh,
+) -> tuple[dict[DirectedLink, float], dict[DirectedLink, int]]:
+    try:
+        cached = _WIRE_TEMPLATES.get(topo)
+    except TypeError:               # unhashable / non-weakrefable topology
+        cached = None
+    if cached is not None:
+        return cached
+    out = _build_wire_structure(topo)
+    try:
+        _WIRE_TEMPLATES[topo] = out
+    except TypeError:
+        pass
+    return out
+
+
 class FluidNetwork:
     """Directed-capacitated network running fluid flows on an EventEngine."""
 
@@ -137,25 +186,24 @@ class FluidNetwork:
         dim_io_gbs: "dict[int, float | dict[int, float]] | None" = None,
         solver: str = "vectorized",
         telemetry: "object | None" = None,
+        reuse_wire_template: bool = True,
     ) -> None:
         self.topo = topo
         self.engine = engine or EventEngine()
-        self.capacity: dict[DirectedLink, float] = {}    # bytes/s
-        self._link_dim: dict[DirectedLink, int] = {}     # wire link -> dim
         # a topology carrying its own ``link_gbs(u, v)`` has heterogeneous
         # per-link capacities (the mixed-granularity coarse meshes: chip
         # links next to rack trunks); a plain NDFullMesh prices every link
-        # of a dimension at that dim's gbs_per_peer
-        link_gbs = getattr(topo, "link_gbs", None)
-        for u, v, d in topo.links():
-            gbs = (
-                link_gbs(u, v) if link_gbs is not None
-                else topo.dims[d].gbs_per_peer
-            ) * 1e9
-            self.capacity[(u, v)] = gbs
-            self.capacity[(v, u)] = gbs
-            self._link_dim[(u, v)] = d
-            self._link_dim[(v, u)] = d
+        # of a dimension at that dim's gbs_per_peer.  The (capacity,
+        # link->dim) pair comes from the per-topology template cache;
+        # capacity is copied because this network may mutate it.
+        # ``reuse_wire_template=False`` bypasses the cache (the benchmark
+        # baseline that prices the pre-cache construction cost).
+        if reuse_wire_template:
+            cap_template, link_dim = _wire_structure(topo)
+        else:
+            cap_template, link_dim = _build_wire_structure(topo)
+        self.capacity: dict[DirectedLink, float] = dict(cap_template)
+        self._link_dim: dict[DirectedLink, int] = link_dim
         # receiver-egress caps, bytes/s per node (empty = unconstrained)
         if rx_gbs is None:
             self.rx_cap: dict[int, float] = {}

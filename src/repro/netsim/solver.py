@@ -47,6 +47,12 @@ if TYPE_CHECKING:  # pragma: no cover
 # of the round's minimum freeze together (they are equal to fp noise)
 LEVEL_RTOL = 1e-9
 
+# bump whenever an allocator change can alter solved rates (and therefore
+# measured calibration bandwidths) — part of the persistent calibration
+# cache key (core/calib_cache.py), so stale on-disk profiles are dropped
+# instead of silently served
+SOLVER_VERSION = 1
+
 
 class ReferenceMaxMinSolver:
     """Pure-Python progressive filling (the PR-1 implementation).

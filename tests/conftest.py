@@ -14,6 +14,19 @@ and the property tests skip via ``tests/_hypothesis_compat.py``.
 
 import os
 
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_calib_cache(tmp_path, monkeypatch):
+    """Point the persistent calibration cache (core/calib_cache.py) at a
+    per-test temp dir so test runs never read from or write to the
+    developer's real ``~/.cache`` — measured values are content-addressed
+    and would be identical, but cold-vs-warm assertions (miss counters,
+    file lifecycle) need a cache whose state the test controls."""
+    monkeypatch.setenv("CALIB_CACHE_DIR", str(tmp_path / "calib-cache"))
+
+
 try:
     from hypothesis import settings
 

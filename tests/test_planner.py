@@ -7,7 +7,13 @@ import time
 import pytest
 
 from repro.core import planner
-from repro.core.cost_model import AxisCost, CommModel, Routing, build_comm_model
+from repro.core.cost_model import (
+    AxisCost,
+    CommModel,
+    Routing,
+    build_comm_model,
+    clos_comm_model,
+)
 from repro.core.perf_model import (
     AnalyticPerfModel,
     NetsimPerfModel,
@@ -199,6 +205,121 @@ class TestPerfModelBackends:
         cn = netsim.comm_model(None)
         for name, a in cn.axes.items():
             assert a.gbs_per_chip <= ca.axes[name].gbs_per_chip * 1.001
+
+
+class TestAnalyticPrefilter:
+    """ISSUE-7 pre-filter: the vectorized analytic cull must never change
+    the winner on any bench config (prefilter=None is the proven-equal
+    escape hatch), must actually cull, and must fall back to the
+    unfiltered path on models it cannot price."""
+
+    def _configs(self):
+        moe2t, _ = traffic_mod.moe_2t_workload()
+        for w in traffic_mod.backend_comparison_workloads():
+            yield w, 1024
+            yield w, 4096
+        yield traffic_mod.a2a_divergence_workload(), 1024
+        yield moe2t, 4096
+
+    @pytest.mark.parametrize("factory,label", [
+        (lambda: build_comm_model(multi_pod=True, routing=Routing.DETOUR), "ubmesh"),
+        (lambda: clos_comm_model(multi_pod=True), "clos"),
+    ])
+    def test_winner_preserved_on_every_bench_config(self, factory, label):
+        comm = factory()
+        for w, chips in self._configs():
+            full = plan(w, chips, comm, prefilter=None)
+            fast = plan(w, chips, comm)
+            assert fast[0].spec == full[0].spec, (label, w.name, chips)
+            assert fast[0].iteration_s == pytest.approx(
+                full[0].iteration_s, rel=1e-12
+            )
+            # the filter genuinely culls (these spaces are all 200+ specs)
+            assert fast.n_prefiltered > 0, (label, w.name, chips)
+            assert full.n_prefiltered == 0
+
+    def test_winner_preserved_on_netsim_backend(self):
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        netsim = NetsimPerfModel(comm, topo=ub_mesh_pod(), size_bytes=16e6)
+        w = traffic_mod.a2a_divergence_workload()
+        fast = plan(w, 256, netsim)
+        full = plan(w, 256, netsim, prefilter=None, precalibrate=False)
+        assert fast[0].spec == full[0].spec
+        assert fast[0].iteration_s == pytest.approx(
+            full[0].iteration_s, rel=1e-12
+        )
+        assert fast.n_prefiltered > 0
+
+    def test_unpriceable_model_falls_back_to_unfiltered(self):
+        # no "data" axis: the prefilter cannot price PP/DP and must get out
+        # of the way — same skip accounting as the unfiltered path
+        broken = CommModel(axes={"model": AxisCost(16, 200.0, 1e-6)})
+        w = TestPlanReport.W
+        rep = plan(w, 64, broken)
+        assert rep.n_prefiltered == 0
+        assert rep.skipped.get("KeyError", 0) > 0
+
+    def test_enumeration_knobs_thread_through(self):
+        w = TestPlanReport.W
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        wide = plan(w, 64, comm)
+        narrow = plan(w, 64, comm, max_tp=2, microbatch_options=(1,))
+        assert narrow.n_enumerated < wide.n_enumerated
+        assert all(r.spec.tp <= 2 and r.spec.microbatches == 1 for r in narrow)
+        s = planner.best_parallel_spec(
+            w, 64, comm, max_tp=2, microbatch_options=(1,)
+        )
+        assert s.tp <= 2 and s.microbatches == 1
+
+
+class TestBatchedPrecalibration:
+    """ISSUE-7 batched calibration: precalibrate() front-loads every key a
+    spec set needs, and the relocated concurrent DAGs measure exactly what
+    sequential runs measure (the box-disjointness invariant)."""
+
+    def test_precalibrate_covers_plan_keys(self):
+        from repro.core import perf_model as pm
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        netsim = NetsimPerfModel(
+            comm, topo=ub_mesh_pod(), size_bytes=16e6, cache_dir=None
+        )
+        w = TestPerfModelBackends.W_CLEAN
+        specs = planner.enumerate_specs(w, 256)
+        info = netsim.precalibrate(specs)
+        assert info["keys"] > 0
+        # a subsequent plan over the same space measures nothing new
+        before = len(pm._CALIBRATION_CACHE)
+        rep = plan(w, 256, netsim, prefilter=None)
+        assert len(pm._CALIBRATION_CACHE) == before
+        assert rep.calibration["misses"] == 0
+
+    def test_batched_measurement_matches_sequential(self):
+        from repro.netsim import NetSim
+
+        comm = build_comm_model(multi_pod=False, routing=Routing.DETOUR)
+        sim = NetSim(ub_mesh_pod(), routing=Routing.DETOUR)
+        reqs = [
+            ("model", "allreduce", None), ("model", "all_gather", 8),
+            ("model", "all_to_all", 4), ("data", "allreduce", None),
+            ("data", "p2p", None), ("model", "allreduce", 16),
+        ]
+        batched = sim.measure_profile_batch(16e6, reqs, comm=comm, batch_size=6)
+        sequential = sim.measure_profile_batch(16e6, reqs, comm=comm, batch_size=1)
+        for key in reqs:
+            assert batched[key] == pytest.approx(sequential[key], rel=1e-9), key
+
+    def test_borrow_routing_disables_batching(self):
+        from repro.netsim import NetSim
+
+        sim = NetSim(ub_mesh_pod(), routing=Routing.BORROW)
+        assert not sim.can_batch_calibration()
+        # sequential fallback still measures every key
+        comm = build_comm_model(multi_pod=False, routing=Routing.BORROW)
+        out = sim.measure_profile_batch(
+            16e6, [("model", "allreduce", None)], comm=comm
+        )
+        assert out[("model", "allreduce", None)] > 0
 
 
 class TestShapeAwareProfile:
