@@ -77,6 +77,15 @@ def planner_backends():
         derived[f"{name}/cal_misses"] = cal.get("misses", 0)
         derived[f"{name}/cal_disk_hits"] = cal.get("disk_hits", 0)
         derived[f"{name}/cal_measure_s"] = round(cal.get("measure_s", 0.0), 3)
+        # sweep-level batching stats: how many solver sessions the keys
+        # were packed into (keys/session > 1 means sharing happened)
+        sessions = cal.get("sessions", 0)
+        keys = cal.get("session_keys", 0)
+        derived[f"{name}/cal_sessions"] = sessions
+        derived[f"{name}/cal_session_keys"] = keys
+        derived[f"{name}/cal_keys_per_session"] = (
+            round(keys / sessions, 2) if sessions else 0.0
+        )
     # shape-awareness flip: same netsim backend, AllReduce proxy vs profile
     proxy = NetsimPerfModel(
         comm, topo=ub_mesh_pod(), size_bytes=_CAL_BYTES, shapes=("allreduce",)

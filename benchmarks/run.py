@@ -145,9 +145,19 @@ def main() -> None:
         failures += 1
         rows.append(f"planner_bench,0,ERROR={type(e).__name__}:{e}")
         PLANNER_BENCHMARKS = {}
+    try:
+        from benchmarks.topo_search import CODESIGN_BENCHMARKS
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        rows.append(f"topo_search,0,ERROR={type(e).__name__}:{e}")
+        CODESIGN_BENCHMARKS = {}
 
     if args.suite == "smoke":
-        benchmarks = {**SMOKE_BENCHMARKS, **PLANNER_BENCHMARKS}
+        benchmarks = {
+            **SMOKE_BENCHMARKS,
+            **PLANNER_BENCHMARKS,
+            **CODESIGN_BENCHMARKS,
+        }
     elif args.suite == "scale":
         from benchmarks.netsim_scale import SCALE_BENCHMARKS
 
@@ -155,7 +165,12 @@ def main() -> None:
     else:
         from benchmarks.paper_tables import ALL_BENCHMARKS
 
-        benchmarks = {**ALL_BENCHMARKS, **NETSIM_BENCHMARKS, **PLANNER_BENCHMARKS}
+        benchmarks = {
+            **ALL_BENCHMARKS,
+            **NETSIM_BENCHMARKS,
+            **PLANNER_BENCHMARKS,
+            **CODESIGN_BENCHMARKS,
+        }
     for name, fn in benchmarks.items():
         t0 = time.perf_counter()
         try:

@@ -53,6 +53,25 @@ SCHEMA_VERSION = 1
 ENV_VAR = "CALIB_CACHE_DIR"
 _DEFAULT_SUBDIR = ("ubmesh-repro", "calib")
 
+# geometry sweeps create one store file per candidate topology; cap the
+# directory at this many stores (least-recently-written evicted first)
+MAX_STORES_ENV_VAR = "CALIB_CACHE_MAX_STORES"
+DEFAULT_MAX_STORES = 256
+
+
+def max_stores() -> int:
+    """Store-count cap: ``$CALIB_CACHE_MAX_STORES`` if set, else 256.
+    ``0`` (or a negative / unparsable value <= 0) disables pruning."""
+    env = os.environ.get(MAX_STORES_ENV_VAR)
+    if env:
+        try:
+            return int(env)
+        except ValueError:
+            log.warning(
+                "ignoring unparsable %s=%r", MAX_STORES_ENV_VAR, env
+            )
+    return DEFAULT_MAX_STORES
+
 
 def default_cache_dir() -> Path:
     """``$CALIB_CACHE_DIR`` if set (and non-empty), else
@@ -175,8 +194,45 @@ class CalibCache:
                 except OSError:
                     pass
                 raise
+            self.prune()
         except OSError as e:
             log.warning(
                 "calibration cache %s not writable (%s: %s) — measurement "
                 "kept in memory only", path, type(e).__name__, e,
             )
+
+    # -- maintenance -----------------------------------------------------
+    def prune(self, keep: int | None = None) -> list[Path]:
+        """Evict least-recently-written store files beyond ``keep``.
+
+        A geometry sweep writes one ``calib-*.json`` per candidate topology,
+        so an unbounded ``$CALIB_CACHE_DIR`` grows with every sweep.  Keeps
+        the ``keep`` most recently modified stores (default:
+        ``max_stores()``, i.e. ``$CALIB_CACHE_MAX_STORES`` or 256); a
+        ``keep`` <= 0 disables pruning.  Best-effort: IO errors are
+        swallowed.  Returns the paths actually removed.
+        """
+        limit = max_stores() if keep is None else keep
+        if limit <= 0:
+            return []
+        try:
+            stores = sorted(
+                self.dir.glob("calib-*.json"),
+                key=lambda p: p.stat().st_mtime,
+                reverse=True,
+            )
+        except OSError:
+            return []
+        removed: list[Path] = []
+        for path in stores[limit:]:
+            try:
+                path.unlink()
+                removed.append(path)
+            except OSError:
+                pass
+        if removed:
+            log.info(
+                "calibration cache pruned %d store(s) beyond keep=%d",
+                len(removed), limit,
+            )
+        return removed

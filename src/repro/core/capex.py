@@ -7,7 +7,7 @@ prices are calibrated to land its headline numbers:
   1.65x / 2.46x CapEx reduction,
 * network share of system cost: 67% (Clos) -> 20% (UB-Mesh),
 * 98% of HRS and 93% of optical modules saved,
-* OpEx ~ 30% of TCO, UB-Mesh OpEx ~ 35% lower,
+* OpEx ~ 30% of the Clos system's TCO, UB-Mesh OpEx ~ 35-40% lower,
 * cost-efficiency = perf / (CapEx + OpEx)  =>  ~2.04x.
 """
 
@@ -28,21 +28,25 @@ from .topology import (
 # relative unit prices (NPU = 100)
 # Calibrated against the paper's published ratios (network share 67% for
 # Clos / 20% for UB-Mesh, 2.46x CapEx gap => in NPU=100 units the 8K system
-# needs Clos-network ~= 1.72M and UB-network ~= 0.21M; solved per component)
+# needs Clos-network ~= 1.73M and UB-network ~= 0.21M; solved per component
+# against the 8192-chip BOM counts — with these constants
+# ``compare_architectures()`` lands CE gain 2.046, CapEx gain 2.446 and
+# network shares 0.673 / 0.201, all within 1% of the paper (pinned at
+# +-2% by ``tests/test_codesign.py``)
 PRICE = {
     "npu": 100.0,
     "cpu": 12.0,
     "lrs": 34.0,
     "hrs": 150.0,
-    "passive_electrical": 0.6,
+    "passive_electrical": 0.9,
     "active_electrical": 2.0,
-    "optical_100m": 8.3,         # cable + 2 transceivers
-    "optical_1km": 10.8,
+    "optical_100m": 7.0,         # cable + 2 transceivers
+    "optical_1km": 9.2,
     "nic": 1.0,
 }
 
-WATTS = {  # OpEx drivers, relative
-    "npu": 100.0,
+WATTS = {  # OpEx drivers, relative (NPU board incl. memory/VRM dominates)
+    "npu": 140.0,
     "cpu": 25.0,
     "lrs": 8.0,
     "hrs": 90.0,
@@ -105,18 +109,40 @@ class BOM:
         return self.capex() + self.opex()
 
 
-def ub_mesh_bom(n_npus: int = 8192) -> BOM:
+def superpod_bom(
+    sp: SuperPod,
+    *,
+    name: str = "UB-Mesh(4D-FM+Clos)",
+    uplink_provisioning: float = 1.0,
+) -> BOM:
+    """BOM of an arbitrary ``SuperPod`` geometry (co-design candidates).
+
+    ``uplink_provisioning`` thins the pod->HRS Clos tier consistently across
+    cables, transceivers and switches — the paper's Table-2 estimation prices
+    the uplink for the <2% long-range DP share, not the full x256.
+    """
+    return BOM(
+        name=name,
+        n_npus=sp.num_nodes,
+        n_cpus=sp.num_nodes // 8,
+        n_lrs=sp.lrs_count(),
+        n_hrs=sp.hrs_count(uplink_provisioning),
+        cables=sp.cables_by_link_type(uplink_provisioning),
+        optical_modules=sp.optical_modules(uplink_provisioning),
+    )
+
+
+def ub_mesh_bom(n_npus: int = 8192, uplink_provisioning: float = 1.0) -> BOM:
     """UB-Mesh SuperPod: 4D-FM pods + HRS Clos pod tier."""
     sp = SuperPod(n_pods=max(1, n_npus // 1024))
-    cables = sp.cables_by_link_type()
     return BOM(
         name="UB-Mesh(4D-FM+Clos)",
         n_npus=sp.num_nodes,
         n_cpus=sp.num_nodes // 8,
         n_lrs=sp.lrs_count(),
-        n_hrs=sp.hrs_count(),
-        cables=cables,
-        optical_modules=sp.optical_modules(),
+        n_hrs=sp.hrs_count(uplink_provisioning),
+        cables=sp.cables_by_link_type(uplink_provisioning),
+        optical_modules=sp.optical_modules(uplink_provisioning),
     )
 
 

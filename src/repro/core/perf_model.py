@@ -135,6 +135,8 @@ _CALIBRATION_STATS: dict = {
     "disk_hits": 0,
     "measure_s": 0.0,
     "per_key_s": {},
+    "sessions": 0,
+    "session_keys": 0,
 }
 
 
@@ -143,21 +145,28 @@ def calibration_stats() -> dict:
     ``misses`` (in-memory memo lookups by ``_calibrate``), ``disk_hits``
     (misses served by the persistent ``core.calib_cache`` store instead
     of a netsim run), ``measure_s`` (total netsim wall seconds spent
-    measuring), and ``per_key_s`` mapping each measured ``(axis, shape,
+    measuring), ``per_key_s`` mapping each measured ``(axis, shape,
     width)`` to its wall cost (batched measurements split their batch
-    wall time evenly across the batch's keys)."""
+    wall time evenly across the batch's keys), and ``sessions`` /
+    ``session_keys`` (solver sessions run and keys measured across them
+    — ``session_keys / sessions`` is the batching efficiency)."""
     return {
         "hits": _CALIBRATION_STATS["hits"],
         "misses": _CALIBRATION_STATS["misses"],
         "disk_hits": _CALIBRATION_STATS["disk_hits"],
         "measure_s": _CALIBRATION_STATS["measure_s"],
         "per_key_s": dict(_CALIBRATION_STATS["per_key_s"]),
+        "sessions": _CALIBRATION_STATS["sessions"],
+        "session_keys": _CALIBRATION_STATS["session_keys"],
     }
 
 
 def reset_calibration_stats() -> None:
     """Zero the memo counters (the cache itself is untouched)."""
-    _CALIBRATION_STATS.update(hits=0, misses=0, disk_hits=0, measure_s=0.0)
+    _CALIBRATION_STATS.update(
+        hits=0, misses=0, disk_hits=0, measure_s=0.0,
+        sessions=0, session_keys=0,
+    )
     _CALIBRATION_STATS["per_key_s"] = {}
 
 
@@ -323,6 +332,61 @@ class NetsimPerfModel:
         vals = self._calibrate_keys(triples)
         return {(a, s): vals[(a, s, w)] for (a, s), w in widths.items()}
 
+    def _key_context(self):
+        """The memo-key closure plus persistent-store configs — shared by
+        the per-model ``_calibrate_keys`` path and the cross-topology
+        ``precalibrate_models`` sweep path so keys always compose the same
+        way.  Returns ``(key, store_configs, detail_tag, bg_bytes)``."""
+        key_base, coarse_tag, detail_tag, bg_bytes = self._tags()
+
+        def key(axis: str, shape: str, w: int | None) -> tuple:
+            if shape == "reduce_scatter":
+                shape = "all_gather"
+            if axis == "pod":
+                return key_base + coarse_tag + (axis, shape, w)
+            if axis == "model" and detail_tag:
+                return key_base + coarse_tag + detail_tag + (axis, shape, w)
+            return key_base + (axis, shape, w)
+
+        store_configs = {
+            "chip": list(key_base),
+            "pod": list(key_base + coarse_tag),
+            "mixed": list(key_base + coarse_tag + detail_tag),
+        }
+        return key, store_configs, detail_tag, bg_bytes
+
+    def _resolve_disk(self, missing: set, key, store_configs, detail_tag):
+        """Serve memo ``missing`` entries from the persistent store
+        (mutating ``missing``, the memo and the stats counters); returns
+        the disk handle for later write-back (None when disabled)."""
+        disk = self._disk_cache() if missing else None
+        if disk is not None:
+            stored: dict[str, dict] = {}
+            for axis, shape, w in list(missing):
+                kind = self._store_kind(axis, detail_tag)
+                if kind not in stored:
+                    stored[kind] = disk.get_profile(store_configs[kind])
+                mshape = "all_gather" if shape == "reduce_scatter" else shape
+                v = stored[kind].get((axis, mshape, w))
+                if v is not None:
+                    _CALIBRATION_CACHE[key(axis, shape, w)] = v
+                    _CALIBRATION_STATS["disk_hits"] += 1
+                    missing.discard((axis, shape, w))
+        return disk
+
+    def _to_measure(
+        self, missing: set, detail_tag
+    ) -> "dict[tuple[str, str, int | None], str]":
+        """De-alias and de-duplicate what still needs a netsim run: the
+        reduce_scatter/all_gather pair must measure ONCE, not twice.
+        Maps each measured triple to its store kind."""
+        to_measure: dict[tuple[str, str, int | None], str] = {}
+        for axis, shape, w in sorted(missing, key=str):
+            mshape = "all_gather" if shape == "reduce_scatter" else shape
+            kind = self._store_kind(axis, detail_tag)
+            to_measure.setdefault((axis, mshape, w), kind)
+        return to_measure
+
     def _calibrate_keys(
         self, triples: "list[tuple[str, str, int | None]]"
     ) -> "dict[tuple[str, str, int | None], float]":
@@ -338,16 +402,7 @@ class NetsimPerfModel:
         Newly measured values are written back to the disk store."""
         from ..netsim import NetSim  # deferred: core must not hard-require netsim
 
-        key_base, coarse_tag, detail_tag, bg_bytes = self._tags()
-
-        def key(axis: str, shape: str, w: int | None) -> tuple:
-            if shape == "reduce_scatter":
-                shape = "all_gather"
-            if axis == "pod":
-                return key_base + coarse_tag + (axis, shape, w)
-            if axis == "model" and detail_tag:
-                return key_base + coarse_tag + detail_tag + (axis, shape, w)
-            return key_base + (axis, shape, w)
+        key, store_configs, detail_tag, bg_bytes = self._key_context()
 
         missing = {
             (axis, shape, w)
@@ -358,32 +413,8 @@ class NetsimPerfModel:
         _CALIBRATION_STATS["misses"] += len(missing)
 
         # persistent read-through: serve misses from the on-disk profile
-        disk = self._disk_cache() if missing else None
-        store_configs = {
-            "chip": list(key_base),
-            "pod": list(key_base + coarse_tag),
-            "mixed": list(key_base + coarse_tag + detail_tag),
-        }
-        if disk is not None:
-            stored: dict[str, dict] = {}
-            for axis, shape, w in list(missing):
-                kind = self._store_kind(axis, detail_tag)
-                if kind not in stored:
-                    stored[kind] = disk.get_profile(store_configs[kind])
-                mshape = "all_gather" if shape == "reduce_scatter" else shape
-                v = stored[kind].get((axis, mshape, w))
-                if v is not None:
-                    _CALIBRATION_CACHE[key(axis, shape, w)] = v
-                    _CALIBRATION_STATS["disk_hits"] += 1
-                    missing.discard((axis, shape, w))
-
-        # de-alias and de-duplicate what still needs a netsim run: the
-        # reduce_scatter/all_gather pair must measure ONCE, not twice
-        to_measure: dict[tuple[str, str, int | None], str] = {}
-        for axis, shape, w in sorted(missing, key=str):
-            mshape = "all_gather" if shape == "reduce_scatter" else shape
-            kind = self._store_kind(axis, detail_tag)
-            to_measure.setdefault((axis, mshape, w), kind)
+        disk = self._resolve_disk(missing, key, store_configs, detail_tag)
+        to_measure = self._to_measure(missing, detail_tag)
 
         new_by_kind: dict[str, dict] = {}
 
@@ -412,6 +443,7 @@ class NetsimPerfModel:
                 chip_keys,
                 comm=self.base,
                 batch_size=max(1, self.batch_size),
+                stats=_CALIBRATION_STATS,
             )
             dt = (time.perf_counter() - t0) / len(chip_keys)
             for axis, mshape, w in chip_keys:
@@ -433,6 +465,8 @@ class NetsimPerfModel:
                 rx_gbs=self.rx_gbs,
             )
             for axis, mshape, w in pod_keys:
+                _CALIBRATION_STATS["sessions"] += 1
+                _CALIBRATION_STATS["session_keys"] += 1
                 t0 = time.perf_counter()
                 cal = coarse_calibrated_profile(
                     cm,
@@ -465,6 +499,8 @@ class NetsimPerfModel:
                 rx_gbs=self.rx_gbs,
             )
             for axis, mshape, w in mixed_keys:
+                _CALIBRATION_STATS["sessions"] += 1
+                _CALIBRATION_STATS["session_keys"] += 1
                 t0 = time.perf_counter()
                 cal = mixed_calibrated_profile(
                     cm,
@@ -488,6 +524,66 @@ class NetsimPerfModel:
             (axis, shape, w): _CALIBRATION_CACHE[key(axis, shape, w)]
             for axis, shape, w in triples
         }
+
+    def _measure_coarse_key(
+        self, cm, kind: str, axis: str, mshape: str, w: "int | None"
+    ) -> "float | None":
+        """One coarse ("pod") or mixed-granularity key measured on mesh
+        ``cm`` — a single solver session.  Used by ``precalibrate_models``
+        to measure each distinct coarse signature once and fan the value
+        out to every candidate that shares it."""
+        _CALIBRATION_STATS["sessions"] += 1
+        _CALIBRATION_STATS["session_keys"] += 1
+        t0 = time.perf_counter()
+        if kind == "pod":
+            from ..netsim.coarsen import (
+                coarse_calibrated_profile,
+                coarse_netsim,
+            )
+
+            sim = coarse_netsim(
+                cm,
+                routing=self.base.routing,
+                latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
+            )
+            cal = coarse_calibrated_profile(
+                cm,
+                self.size_bytes,
+                comm=self.base,
+                widths={} if w is None else {axis: w},
+                axes=(axis,),
+                shapes=(mshape,),
+                sim=sim,
+            )
+        else:
+            from ..netsim.coarsen import (
+                mixed_calibrated_profile,
+                mixed_netsim,
+            )
+
+            bg = (
+                self.size_bytes if self.background_bytes is None
+                else self.background_bytes
+            )
+            sim = mixed_netsim(
+                cm,
+                routing=self.base.routing,
+                latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
+            )
+            cal = mixed_calibrated_profile(
+                cm,
+                self.size_bytes,
+                comm=self.base,
+                widths={} if w is None else {axis: w},
+                axes=(axis,),
+                shapes=(mshape,),
+                background_per_chip_bytes=bg,
+                sim=sim,
+            )
+        _record_measurement(axis, mshape, w, time.perf_counter() - t0)
+        return cal.gbs.get((axis, mshape))
 
     def precalibrate(
         self, specs: "list[ParallelSpec] | tuple[ParallelSpec, ...]"
@@ -587,3 +683,194 @@ class NetsimPerfModel:
 
     def override_axis(self, name: str, cost: AxisCost) -> "NetsimPerfModel":
         return replace(self, pinned={**self.pinned, name: cost})
+
+
+# ---------------------------------------------------------------------------
+# Cross-topology batched precalibration (geometry sweeps)
+# ---------------------------------------------------------------------------
+
+
+def _coarse_measure_sig(
+    m: NetsimPerfModel, kind: str, cm, store_configs: dict
+) -> tuple:
+    """Everything that determines a coarse-mesh measurement's outcome
+    besides the (axis, shape, width) triple — the cross-candidate dedup
+    key of ``precalibrate_models``.
+
+    The "pod" signature is *structural*: the coarse mesh derives from the
+    pod's inter-rack dims and the uplink only, so candidates that differ
+    in intra-rack lanes (different chip topologies, different memo keys)
+    still share one coarse measurement.  Mixed-granularity entries stay
+    conservative: their exact store config (which pins the embedded chip
+    topology too) is the signature."""
+    if kind == "mixed":
+        return ("mixed",) + tuple(store_configs["mixed"])
+    sizes = tuple(sorted((k, a.size) for k, a in m.base.axes.items()))
+    return (
+        "pod",
+        cm.topo.dims,
+        tuple(sorted((cm.dim_io_gbs or {}).items())),
+        cm.chips_per_node,
+        tuple(sorted((k, tuple(v)) for k, v in cm.axis_dims.items())),
+        m.base.routing.value,
+        float(m.size_bytes),
+        m.latency_s,
+        m.rx_gbs,
+        sizes,
+    )
+
+
+def precalibrate_models(
+    models: "list[NetsimPerfModel] | tuple[NetsimPerfModel, ...]",
+    specs_by_model: "list | None" = None,
+    *,
+    batch_size: int = 8,
+) -> dict:
+    """Front-load calibration for MANY candidate topologies at once — the
+    cross-topology extension of :meth:`NetsimPerfModel.precalibrate` that
+    makes a geometry sweep pay roughly one candidate's measurement bill.
+
+    ``specs_by_model`` optionally aligns one spec list per model (the
+    widths each candidate's planner run will request); ``None`` entries
+    calibrate the spec-independent default widths.
+
+    Three sharings stack on top of the per-model memo/disk resolution:
+
+    * chip-level misses from all candidates go through ONE
+      ``netsim.api.measure_cross_topology`` call — identical measurements
+      (same used-dim specs, same DAG structure) dedup across candidates,
+      and distinct ones share host-mesh solver sessions;
+    * coarse "pod"-axis misses dedup by structural signature
+      (:func:`_coarse_measure_sig`) — candidates differing only in
+      intra-rack provisioning share one coarse-mesh run;
+    * every resolved value lands in each candidate's own memo key and
+      persistent store, so subsequent ``plan()`` calls are measurement-free.
+
+    Returns ``{"models", "keys", "measured", "unique_measured",
+    "deduped", "disk_hits", "sessions", "session_keys", "wall_s"}``.
+    """
+    from ..netsim import NetSim  # deferred: core must not hard-require netsim
+    from ..netsim.api import measure_cross_topology
+
+    t0 = time.perf_counter()
+    before = calibration_stats()
+    models = list(models)
+    specs_list = (
+        list(specs_by_model) if specs_by_model is not None
+        else [None] * len(models)
+    )
+    if len(specs_list) != len(models):
+        raise ValueError("specs_by_model must align with models")
+
+    ctx: list[dict] = []
+    chip_jobs: list = []
+    chip_job_model: list[int] = []
+    coarse_groups: dict = {}
+    coarse_meshes: dict = {}
+    total_keys = 0
+
+    for i, m in enumerate(models):
+        specs = specs_list[i]
+        keys: set = set()
+        for p in (specs if specs else [None]):
+            keys.update((a, s, w) for (a, s), w in m._widths(p).items())
+        total_keys += len(keys)
+        key, store_configs, detail_tag, _bg = m._key_context()
+        missing = {k for k in keys if key(*k) not in _CALIBRATION_CACHE}
+        _CALIBRATION_STATS["hits"] += len(keys) - len(missing)
+        _CALIBRATION_STATS["misses"] += len(missing)
+        disk = m._resolve_disk(missing, key, store_configs, detail_tag)
+        to_measure = m._to_measure(missing, detail_tag)
+        ctx.append({
+            "key": key,
+            "store_configs": store_configs,
+            "disk": disk,
+            "new_by_kind": {},
+        })
+        chip_keys = sorted(
+            (k for k, kind in to_measure.items() if kind == "chip"), key=str
+        )
+        if chip_keys:
+            sim = NetSim(
+                m.topo,
+                routing=m.base.routing,
+                latency_s=m.latency_s,
+                rx_gbs=m.rx_gbs,
+                reuse_wire_template=m.reuse_wire_template,
+            )
+            sizes = {k: a.size for k, a in m.base.axes.items()}
+            chip_jobs.append((sim, m.size_bytes, chip_keys, sizes))
+            chip_job_model.append(i)
+        for triple, kind in to_measure.items():
+            if kind == "chip":
+                continue
+            cm = coarse_meshes.get((i, kind))
+            if cm is None:
+                from ..netsim.coarsen import coarsen_superpod
+
+                cm = coarsen_superpod(
+                    m.superpod,
+                    level=m.coarsen_level,
+                    detail_racks=(
+                        m.detail_racks if kind == "mixed" else ()
+                    ),
+                )
+                coarse_meshes[(i, kind)] = cm
+            sig = _coarse_measure_sig(m, kind, cm, store_configs) + triple
+            coarse_groups.setdefault(sig, []).append((i, kind, triple))
+
+    # chip-level: one cross-topology batched measurement over all models
+    if chip_jobs:
+        t0c = time.perf_counter()
+        measured = measure_cross_topology(
+            chip_jobs, batch_size=batch_size, stats=_CALIBRATION_STATS
+        )
+        dtc = time.perf_counter() - t0c
+        n_chip = sum(len(j[2]) for j in chip_jobs) or 1
+        for i, job, out in zip(chip_job_model, chip_jobs, measured):
+            m, c = models[i], ctx[i]
+            for triple in job[2]:
+                axis, mshape, w = triple
+                _record_measurement(axis, mshape, w, dtc / n_chip)
+                gbs = out[triple]
+                val = (
+                    gbs if gbs is not None
+                    else m.base.axes[axis].gbs_per_chip
+                )
+                _CALIBRATION_CACHE[c["key"](axis, mshape, w)] = val
+                c["new_by_kind"].setdefault("chip", {})[triple] = val
+
+    # coarse/mixed: measured once per distinct signature, fanned out
+    for sig, refs in coarse_groups.items():
+        i0, kind0, (axis, mshape, w) = refs[0]
+        gbs = models[i0]._measure_coarse_key(
+            coarse_meshes[(i0, kind0)], kind0, axis, mshape, w
+        )
+        for i, kind, triple in refs:
+            m, c = models[i], ctx[i]
+            val = gbs if gbs is not None else m.base.axes[axis].gbs_per_chip
+            _CALIBRATION_CACHE[c["key"](*triple)] = val
+            c["new_by_kind"].setdefault(kind, {})[triple] = val
+
+    # persistent write-back, per candidate per store kind (best-effort)
+    for c in ctx:
+        if c["new_by_kind"] and c["disk"] is not None:
+            for kind, entries in c["new_by_kind"].items():
+                c["disk"].update(c["store_configs"][kind], entries)
+
+    after = calibration_stats()
+    measured_reqs = (after["misses"] - before["misses"]) - (
+        after["disk_hits"] - before["disk_hits"]
+    )
+    unique = after["session_keys"] - before["session_keys"]
+    return {
+        "models": len(models),
+        "keys": total_keys,
+        "measured": measured_reqs,
+        "unique_measured": unique,
+        "deduped": max(0, measured_reqs - unique),
+        "disk_hits": after["disk_hits"] - before["disk_hits"],
+        "sessions": after["sessions"] - before["sessions"],
+        "session_keys": unique,
+        "wall_s": time.perf_counter() - t0,
+    }

@@ -101,25 +101,29 @@ class Prefilter:
     margin: float = 5.0
 
 
-def _prefilter_mask(
+def analytic_iteration_arrays(
     w: WorkloadSpec,
     specs: list[ParallelSpec],
     comm: CommModel,
     *,
-    rack_size: int,
-    keep_k: int,
-    margin: float,
+    rack_size: int = 64,
 ):
-    """Boolean survivor mask over ``specs`` from the vectorized analytic
-    cost model.
+    """Per-spec ``(compute_s, comm_s, bubble_s)`` numpy arrays from the
+    vectorized analytic cost model — the batch replica of
+    ``analyze_traffic`` + ``simulate``.
 
-    Replicates ``analyze_traffic`` + ``simulate`` as numpy array ops over
-    the whole batch: every closed-form collective cost is linear in the
-    payload for a fixed ``CommModel`` (``c1 * bytes + c0``), so each
-    (axis, shape) needs one two-point probe and the per-spec composition
-    is pure arithmetic on the (tp, sp, pp, dp, ep, m) arrays.  Raises on
-    models the analytic composition cannot price (missing axes) — the
-    caller falls back to the unfiltered path."""
+    Every closed-form collective cost is linear in the payload for a
+    fixed ``CommModel`` (``c1 * bytes + c0``), so each (axis, shape)
+    needs one two-point probe and the per-spec composition is pure
+    arithmetic on the (tp, sp, pp, dp, ep, m) arrays.  Raises on models
+    the analytic composition cannot price (missing axes).
+
+    Shared by the planner's spec pre-filter (:func:`_prefilter_mask`) and
+    the topology co-design geometry cull (``core/codesign.py``) — when a
+    measured backend clamps at the analytic bound, ``compute + bubble +
+    comm`` is a LOWER bound and ``compute + bubble + margin * comm`` an
+    upper-bound proxy on the measured iteration, which is what both
+    winner-safety arguments rest on."""
     import numpy as np
 
     from .simulator import OVERLAP, _compute_seconds
@@ -223,6 +227,25 @@ def _prefilter_mask(
 
     compute_s = _compute_seconds(w, specs[0])    # chips-invariant scalar
     bubble_s = np.where(pp > 1, compute_s * (pp - 1) / np.maximum(m, 1), 0.0)
+    return np.full(len(specs), compute_s), comm_total, bubble_s
+
+
+def _prefilter_mask(
+    w: WorkloadSpec,
+    specs: list[ParallelSpec],
+    comm: CommModel,
+    *,
+    rack_size: int,
+    keep_k: int,
+    margin: float,
+):
+    """Boolean survivor mask over ``specs`` from
+    :func:`analytic_iteration_arrays`."""
+    import numpy as np
+
+    compute_s, comm_total, bubble_s = analytic_iteration_arrays(
+        w, specs, comm, rack_size=rack_size
+    )
     iteration = compute_s + comm_total + bubble_s
 
     # survivors: the analytic top keep_k, plus everything that could still
@@ -458,6 +481,8 @@ def plan(
         "misses": cal_after["misses"] - cal_before["misses"],
         "disk_hits": cal_after["disk_hits"] - cal_before["disk_hits"],
         "measure_s": cal_after["measure_s"] - cal_before["measure_s"],
+        "sessions": cal_after["sessions"] - cal_before["sessions"],
+        "session_keys": cal_after["session_keys"] - cal_before["session_keys"],
         "per_key_s": {
             "{}/{}/{}".format(*k): dt - cal_before["per_key_s"].get(k, 0.0)
             for k, dt in cal_after["per_key_s"].items()

@@ -305,19 +305,26 @@ class SuperPod:
     def n_racks(self) -> int:
         return self.racks_per_pod * self.n_pods
 
-    def hrs_count(self) -> int:
-        """High-radix switches needed for the pod-level Clos tier."""
-        total_uplinks = self.n_racks * self.uplink_lanes_per_rack
+    def hrs_count(self, uplink_provisioning: float = 1.0) -> int:
+        """High-radix switches needed for the pod-level Clos tier.
+
+        ``uplink_provisioning`` mirrors the knob on
+        ``cables_by_link_type``: a thinner pod->HRS tier needs
+        proportionally fewer switch ports, hence fewer HRS.
+        """
+        lanes = self.uplink_lanes_per_rack * uplink_provisioning
+        total_uplinks = self.n_racks * lanes
         return max(1, math.ceil(total_uplinks / self.hrs_radix))
 
-    def optical_modules(self) -> int:
+    def optical_modules(self, uplink_provisioning: float = 1.0) -> int:
         """Optical transceivers: 2 per optical cable (both ends)."""
         per_pod = self.pod.cables_by_link_type()
         pod_optical = sum(
             v for k, v in per_pod.items() if k.startswith("optical")
         )
+        lanes = self.uplink_lanes_per_rack * uplink_provisioning
         uplink_cables = self.n_racks * math.ceil(
-            self.uplink_lanes_per_rack / OPTICAL_1KM.lanes_per_cable
+            lanes / OPTICAL_1KM.lanes_per_cable
         )
         return 2 * (pod_optical * self.n_pods + uplink_cables)
 

@@ -25,6 +25,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from ..core.cost_model import (
     A2A_CALIBRATION_MAX_NODES,
     COLLECTIVE_SHAPES,
@@ -32,7 +34,7 @@ from ..core.cost_model import (
     CommModel,
     Routing,
 )
-from ..core.topology import NDFullMesh, ub_mesh_pod
+from ..core.topology import DimSpec, NDFullMesh, PASSIVE_ELECTRICAL, ub_mesh_pod
 from ..core.traffic import ParallelSpec, WorkloadSpec
 from .collectives import (
     FlowDAG,
@@ -738,6 +740,7 @@ class NetSim:
         comm: "CommModel | None" = None,
         axis_sizes: dict[str, int] | None = None,
         batch_size: int = 8,
+        stats: dict | None = None,
     ) -> "dict[tuple[str, str, int | None], float | None]":
         """Measure many ``(axis, shape, width)`` calibration keys in few
         solver sessions.
@@ -752,7 +755,9 @@ class NetSim:
         reached, or the NetSim configuration forbids it) run sequentially.
         Returns measured GB/s per request (``None`` where the shape
         yields no DAG on this topology — the caller's analytic-fallback
-        convention)."""
+        convention).  ``stats``, when given, accumulates ``sessions``
+        (solver sessions run) and ``session_keys`` (keys measured across
+        them) so sweep drivers can report batching efficiency."""
         if axis_sizes is None and comm is not None:
             axis_sizes = {k: a.size for k, a in comm.axes.items()}
         sizes = axis_sizes or {"model": 16, "data": 16}
@@ -780,8 +785,14 @@ class NetSim:
             wire = self._wire_fraction(shape, n) * size_bytes
             out[key] = wire / makespan / 1e9 if makespan > 0 else None
 
+        def count(keys: int) -> None:
+            if stats is not None:
+                stats["sessions"] = stats.get("sessions", 0) + 1
+                stats["session_keys"] = stats.get("session_keys", 0) + keys
+
         if not self.can_batch_calibration():
             for key, dag in build:
+                count(1)
                 finish(key, self.run_dag(dag).makespan_s)
             return out
 
@@ -792,6 +803,7 @@ class NetSim:
         def flush() -> None:
             if not batch:
                 return
+            count(len(batch))
             for res, (key, _dag) in zip(
                 self.run_dags([dag for _k, dag in batch]), batch
             ):
@@ -807,10 +819,212 @@ class NetSim:
                 flush()
                 placed = self._place_dag(dag, self._dag_box(dag), [])
             if placed is None:          # does not fit even alone (cannot
-                finish(key, self.run_dag(dag).makespan_s)   # happen today)
+                count(1)                # happen today)
+                finish(key, self.run_dag(dag).makespan_s)
                 continue
             tdag, tbox = placed
             batch.append((key, tdag))
             boxes.append(tbox)
         flush()
         return out
+
+
+# ---------------------------------------------------------------------------
+# Cross-topology batched calibration (topology co-design sweeps)
+# ---------------------------------------------------------------------------
+
+# host meshes are cached so ``flows``' per-topology wire templates survive
+# across sweep groups with the same dimension specs
+_HOST_MESH_CACHE: "dict[tuple, NDFullMesh]" = {}
+
+
+def _host_mesh(dim_specs: "tuple[DimSpec, ...]", n_slots: int) -> NDFullMesh:
+    """A common host mesh for ``n_slots`` concurrent calibration DAGs that
+    all live on dimensions ``dim_specs``: the candidate dims plus one
+    passive batch dimension "B" of size ``n_slots``.  DAGs in distinct
+    B-slots have disjoint coordinate boxes, so by the same box-confinement
+    argument as :meth:`NetSim.can_batch_calibration` they never share a
+    link or an rx port."""
+    key = (dim_specs, n_slots)
+    topo = _HOST_MESH_CACHE.get(key)
+    if topo is None:
+        dims = dim_specs + (DimSpec("B", n_slots, PASSIVE_ELECTRICAL, 1),)
+        topo = _HOST_MESH_CACHE[key] = NDFullMesh(dims=dims)
+    return topo
+
+
+def measure_cross_topology(
+    jobs: "list[tuple[NetSim, float, list[tuple[str, str, int | None]], dict[str, int]]]",
+    *,
+    batch_size: int = 8,
+    stats: dict | None = None,
+) -> "list[dict[tuple[str, str, int | None], float | None]]":
+    """Measure calibration keys from *different candidate topologies* in
+    shared solver sessions (the cross-topology extension of
+    :meth:`NetSim.measure_profile_batch`).
+
+    ``jobs`` is one ``(sim, size_bytes, requests, axis_sizes)`` tuple per
+    candidate; the return value is one ``{key: GB/s | None}`` dict per job,
+    exactly what each job's own ``measure_profile_batch`` would return.
+
+    Two levels of sharing:
+
+    * **Dedup** — a measured makespan is a function of the DAG's structure
+      and the link capacities it touches, not of the candidate it came
+      from.  Requests whose *measurement signature* matches (the DimSpecs
+      of the dimensions their DAG actually uses, the axis-dims shapes, the
+      collective shape/width, payload, routing, latency, rx cap, solver)
+      are measured once and fanned back out to every requesting candidate
+      — each with its own axis-size wire normalization.
+    * **Session sharing** — distinct signatures over the same used-dim
+      specs are relocated into disjoint B-slots of one host mesh
+      (:func:`_host_mesh`) and solved concurrently, the way
+      ``measure_profile_batch`` packs one topology's keys into boxes.
+
+    Candidates whose configuration forbids batching
+    (``can_batch_calibration`` False — BORROW routing, per-node rx dicts,
+    switched-tier IO caps) fall back to their own sequential
+    ``measure_profile_batch`` path, parity-preserved."""
+    results: "list[dict[tuple[str, str, int | None], float | None]]" = [
+        {} for _ in jobs
+    ]
+    # group key -> dedup key -> measurement entry
+    groups: dict = {}
+    for j, (sim, size_bytes, requests, axis_sizes) in enumerate(jobs):
+        sizes = axis_sizes or {"model": 16, "data": 16}
+        if not sim.can_batch_calibration():
+            results[j] = sim.measure_profile_batch(
+                size_bytes,
+                requests,
+                axis_sizes=sizes,
+                batch_size=batch_size,
+                stats=stats,
+            )
+            continue
+        axis_dims = sim._axis_dims_map(None)
+        for axis, shape, w in requests:
+            dims = axis_dims.get(axis)
+            if dims is None:
+                results[j][(axis, shape, w)] = None
+                continue
+            # calibration DAG builders work at the base corner of ``dims``
+            # (every other coordinate is 0), so the dims of size > 1 are a
+            # superset of any coordinate the DAG can touch — cheap to
+            # compute (no DAG build, no box scan) and sufficient for both
+            # the host-mesh embedding and the dedup signature (the DAG is
+            # a pure function of the mkey shapes and the sig capacities)
+            used = tuple(d for d in dims if sim.topo.shape[d] > 1)
+            if not used:
+                # degenerate: every dim the axis maps to has size 1, so
+                # any DAG is confined to one node — run it alone
+                dag = sim._axis_shape_dag(
+                    dims, shape, size_bytes, w, tag=f"cal-{axis}-{shape}"
+                )
+                if dag is None or not dag.tasks:
+                    results[j][(axis, shape, w)] = None
+                    continue
+                if stats is not None:
+                    stats["sessions"] = stats.get("sessions", 0) + 1
+                    stats["session_keys"] = stats.get("session_keys", 0) + 1
+                ms = sim.run_dag(dag).makespan_s
+                n = sizes.get(axis, 16)
+                wire = NetSim._wire_fraction(shape, n) * size_bytes
+                results[j][(axis, shape, w)] = (
+                    wire / ms / 1e9 if ms > 0 else None
+                )
+                continue
+            specs = tuple(sim.topo.dims[d] for d in used)
+            # the rx (incast) cap only binds when a node's total inflow
+            # through the used dims can exceed it — below that bound it is
+            # inert, so canonicalize it away: candidates differing only in
+            # the lanes of *unused* dims (which drive their "auto" rx) then
+            # share one measurement
+            rx = sim.rx_gbs
+            if rx is not None and rx >= sum(s.gbs_total for s in specs):
+                rx = None
+            sig = (
+                specs,
+                sim.routing.value,
+                round(sim.latency_s, 12),
+                rx,
+                sim.solver,
+                sim.aggregate,
+                sim.adaptive,
+                float(size_bytes),
+            )
+            # everything the DAG *structure* depends on beyond the
+            # signature: the axis-dims shapes (clique/plane sizes the
+            # builders see), whether dims[0]==0 (the a2a group-cap and
+            # model_group special case), the collective shape and width
+            mkey = (
+                tuple(sim.topo.shape[d] for d in dims),
+                dims[0] == 0,
+                shape,
+                w,
+            )
+            entry = groups.setdefault(sig, {}).setdefault(
+                mkey,
+                {"sim": sim, "dims": dims, "used": used, "axis": axis,
+                 "shape": shape, "w": w, "refs": []},
+            )
+            entry["refs"].append((j, (axis, shape, w), sizes.get(axis, 16)))
+
+    for sig, by_key in groups.items():
+        specs = sig[0]
+        size_bytes = sig[-1]
+        # one representative DAG per deduped (sig, mkey) — built lazily
+        # here so the candidates' duplicate requests never pay for a build
+        entries = []
+        for e in by_key.values():
+            dag = e["sim"]._axis_shape_dag(
+                e["dims"],
+                e["shape"],
+                size_bytes,
+                e["w"],
+                tag=f"cal-{e['axis']}-{e['shape']}",
+            )
+            if dag is None or not dag.tasks:
+                for j, key, n in e["refs"]:
+                    results[j][key] = None
+                continue
+            e["dag"] = dag
+            entries.append(e)
+        for lo in range(0, len(entries), batch_size):
+            chunk = entries[lo : lo + batch_size]
+            host = _host_mesh(specs, len(chunk))
+            hsim = NetSim(
+                host,
+                routing=Routing(sig[1]),
+                latency_s=sig[2],
+                rx_gbs=sig[3],
+                solver=sig[4],
+                aggregate=sig[5],
+                adaptive=sig[6],
+            )
+            n_slots = len(chunk)
+            dags = []
+            for slot, e in enumerate(chunk):
+                cand, used = e["sim"].topo, e["used"]
+                # vectorized node relocation: both meshes are row-major,
+                # so project the candidate coords onto the used dims and
+                # ravel into the host (the trailing B dim is the slot)
+                coords = np.unravel_index(
+                    np.arange(cand.num_nodes), cand.shape
+                )
+                host_ids = np.ravel_multi_index(
+                    tuple(coords[d] for d in used)
+                    + (np.full(cand.num_nodes, slot),),
+                    host.shape,
+                ).tolist()
+                dags.append(remap_dag(e["dag"], host_ids.__getitem__))
+            if stats is not None:
+                stats["sessions"] = stats.get("sessions", 0) + 1
+                stats["session_keys"] = (
+                    stats.get("session_keys", 0) + len(chunk)
+                )
+            for e, res in zip(chunk, hsim.run_dags(dags)):
+                ms = res.makespan_s
+                for j, key, n in e["refs"]:
+                    wire = NetSim._wire_fraction(key[1], n) * size_bytes
+                    results[j][key] = wire / ms / 1e9 if ms > 0 else None
+    return results

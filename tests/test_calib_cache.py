@@ -10,6 +10,7 @@ file, and a damaged file is ignored with a warning, never a crash.
 """
 
 import json
+import os
 
 import pytest
 
@@ -165,3 +166,50 @@ class TestCacheLocation:
             ("model", "allreduce", None): 100.0,
             ("model", "all_gather", 8): 50.0,
         }
+
+
+class TestPrune:
+    """Store-count cap (ISSUE 8): geometry sweeps write one file per
+    candidate topology, so the directory is pruned LRU-by-mtime."""
+
+    def _fill(self, cache, n):
+        for i in range(n):
+            cache.update([f"cfg-{i}"], {("model", "allreduce", None): float(i)})
+            # mtime-ordered: make each store strictly newer than the last
+            os_path = cache.path_for([f"cfg-{i}"])
+            os.utime(os_path, (1_000_000 + i, 1_000_000 + i))
+
+    def test_prune_keeps_newest(self, tmp_path):
+        cache = CalibCache(tmp_path)
+        self._fill(cache, 6)
+        removed = cache.prune(keep=2)
+        assert len(removed) == 4
+        left = sorted(tmp_path.glob("calib-*.json"))
+        assert len(left) == 2
+        # the survivors are the two most recently written configs
+        assert cache.get_profile(["cfg-5"]) != {}
+        assert cache.get_profile(["cfg-4"]) != {}
+        assert cache.get_profile(["cfg-0"]) == {}
+
+    def test_prune_disabled_by_nonpositive_keep(self, tmp_path):
+        cache = CalibCache(tmp_path)
+        self._fill(cache, 4)
+        assert cache.prune(keep=0) == []
+        assert len(list(tmp_path.glob("calib-*.json"))) == 4
+
+    def test_env_override_controls_cap(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(cc.MAX_STORES_ENV_VAR, "3")
+        assert cc.max_stores() == 3
+        cache = CalibCache(tmp_path)
+        # update() prunes automatically after each write
+        self._fill(cache, 5)
+        assert len(list(tmp_path.glob("calib-*.json"))) <= 3
+
+    def test_unparsable_env_falls_back_to_default(self, monkeypatch, caplog):
+        monkeypatch.setenv(cc.MAX_STORES_ENV_VAR, "lots")
+        with caplog.at_level("WARNING", logger="repro.core.calib_cache"):
+            assert cc.max_stores() == cc.DEFAULT_MAX_STORES
+
+    def test_default_cap_is_256(self, monkeypatch):
+        monkeypatch.delenv(cc.MAX_STORES_ENV_VAR, raising=False)
+        assert cc.max_stores() == 256
