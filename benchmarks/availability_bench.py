@@ -1,0 +1,236 @@
+"""Monte-Carlo availability campaign benchmark + campaign-summary CLI
+(paper §3.3.2, §6.6, Table 6).
+
+``availability_smoke`` (the ``run.py --suite smoke`` entry, < 30 s):
+
+* **Table 6 head-to-head** — sampling-only UB-Mesh vs Clos campaign at
+  8K NPUs over 16 seeds; bar: the measured network-availability gap
+  lands on the paper's ≈7.2 pp (±2 pp band).
+* **Netsim reroute repricing** — every failure class priced on the
+  256-chip smoke pod through ``NetsimPerfModel(failed_links=...)``;
+  bars: trunk/LRS failures produce a measurable degraded step (the
+  number comes from the flow simulator's APR reroute, not an analytic
+  discount) while single intra-rack link failures are fully absorbed by
+  detour routing — the paper's graceful-degradation claim.
+* **Linearity under failures** — weak-scaled 1K -> 8K per-NPU goodput
+  ratio; bar: UB-Mesh >= 95% while the backup-less Clos (full
+  checkpoint-restore per NPU failure) lands far below.
+* **Determinism** — the same seed replays to the identical SeedResult.
+
+The CLI writes the campaign-summary JSON CI uploads as an artifact::
+
+    PYTHONPATH=src python -m benchmarks.availability_bench --smoke \
+        --json campaign_summary.json
+    PYTHONPATH=src python -m benchmarks.availability_bench \
+        --chips 8192 --seeds 16 --weeks 4 --trace trace.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core.codesign import GeometryCandidate
+from repro.runtime.campaign import (
+    CampaignConfig,
+    DegradedRepricer,
+    MESH_CLASSES,
+    _default_workload,
+    campaign_trace,
+    head_to_head,
+    linearity_under_failures,
+    replay_seed,
+    run_campaign,
+)
+
+SMOKE_SEEDS = tuple(range(16))
+
+# paper §6.6 / Table 6 reference points
+REF = {
+    "availability_gap": 0.072,       # "about 7.2% higher availability"
+    "ub_availability": 0.987,        # 88.93/yr @ 75 min MTTR
+    "clos_availability": 0.917,      # 632.8/yr @ 75 min MTTR
+    "linearity": 0.95,               # ">= 95% linearity" under failures
+}
+
+
+def smoke_candidate() -> GeometryCandidate:
+    """256-chip (4,4,4,4) pod: every trunk dimension is >= 3 deep, so all
+    canonical failure classes keep a detour and reprice measurably."""
+    return GeometryCandidate(board=4, boards_per_rack=4)
+
+
+def availability_smoke():
+    t_start = time.perf_counter()
+    cand = smoke_candidate()
+
+    # -- Table 6 head-to-head (sampling-only: the gap is an AFR/repair
+    # property; repricing doesn't move the availability metric) ---------
+    h = head_to_head(chips=8192, seeds=SMOKE_SEEDS, netsim_reprice=False)
+    gap = h["availability_gap"]
+
+    # -- netsim reroute repricing on the smoke pod ----------------------
+    chips = 256
+    perf = cand.perf_model(chips, size_bytes=4e6)
+    from repro.core.planner import best_parallel_spec
+
+    w = _default_workload()
+    spec = best_parallel_spec(w, chips, perf, rack_size=cand.rack_size)
+    rp = DegradedRepricer(
+        perf, w, spec,
+        rack_size=cand.rack_size,
+        hrs_count=cand.superpod(chips).hrs_count(),
+    )
+    deltas = {cls: rp.delta_s(cls) for cls in MESH_CLASSES}
+
+    # -- one netsim-repriced campaign + replay determinism --------------
+    cfg = CampaignConfig(
+        candidate=cand, chips=chips, seeds=(0, 1), size_bytes=4e6,
+        workload=w,
+    )
+    camp = run_campaign(cfg)
+    r0a = replay_seed(camp.config, 0, None)
+    r0b = replay_seed(camp.config, 0, None)
+    deterministic = (
+        r0a.availability == r0b.availability
+        and r0a.goodput == r0b.goodput
+        and r0a.timeline == r0b.timeline
+    )
+
+    # -- linearity under failures (analytic perf; failure discount from
+    # the seeded campaign) ----------------------------------------------
+    lin = linearity_under_failures(
+        1024, 8192, seeds=tuple(range(8)),
+        netsim_reprice=False, perf_backend="analytic",
+    )
+    lin_clos = linearity_under_failures(
+        1024, 8192, seeds=tuple(range(8)), arch="clos",
+        netsim_reprice=False,
+    )
+
+    wall = time.perf_counter() - t_start
+    derived = {
+        "ub_availability": round(h["ub"].availability, 5),
+        "clos_availability": round(h["clos"].availability, 5),
+        "availability_gap": round(gap, 5),
+        "gap_within_2pp_of_paper": abs(gap - REF["availability_gap"]) <= 0.02,
+        "healthy_step_s": round(rp.healthy_s, 4),
+        "delta_a_trunk_s": round(deltas["a_trunk"], 4),
+        "delta_lrs_s": round(deltas["lrs"], 4),
+        "delta_x_link_s": round(deltas["x_link"], 4),
+        "trunk_reprices_measurably": deltas["a_trunk"] > 0
+        and deltas["lrs"] > 0,
+        "single_link_absorbed_by_detour": deltas["x_link"] == 0.0
+        and deltas["y_link"] == 0.0,
+        "smoke_goodput": round(camp.goodput, 5),
+        "replay_deterministic": deterministic,
+        "linearity_ub": round(lin["linearity"], 4),
+        "linearity_clos": round(lin_clos["linearity"], 4),
+        "ub_linearity_ge_95pct": lin["linearity"] >= 0.95,
+        "clos_linearity_below_ub": lin_clos["linearity"] < lin["linearity"],
+        "wall_s": round(wall, 2),
+        "under_30s": wall <= 30.0,
+    }
+    return derived, dict(REF)
+
+
+AVAILABILITY_BENCHMARKS = {"availability_smoke": availability_smoke}
+
+
+# ---------------------------------------------------------------------------
+# CLI: campaign-summary JSON (the CI artifact) + Perfetto timeline
+# ---------------------------------------------------------------------------
+
+
+def full_summary(
+    chips: int, seeds: tuple[int, ...], weeks: float, *, reprice: bool
+) -> dict:
+    h = head_to_head(
+        chips=chips, seeds=seeds, horizon_weeks=weeks, netsim_reprice=reprice
+    )
+    lin = linearity_under_failures(
+        min(1024, chips), chips, seeds=seeds, horizon_weeks=weeks,
+        netsim_reprice=reprice,
+        perf_backend="netsim" if reprice else "analytic",
+    )
+    lin_clos = linearity_under_failures(
+        min(1024, chips), chips, seeds=seeds, horizon_weeks=weeks,
+        arch="clos", netsim_reprice=False,
+    )
+    return {
+        "suite": "availability_campaign",
+        "chips": chips,
+        "seeds": len(seeds),
+        "horizon_weeks": weeks,
+        "netsim_reprice": reprice,
+        "ub": h["ub"].summary(),
+        "clos": h["clos"].summary(),
+        "availability_gap": round(h["availability_gap"], 5),
+        "analytic_gap": round(h["analytic_gap"], 5),
+        "goodput_gap": round(h["goodput_gap"], 5),
+        "linearity_ub": round(lin["linearity"], 5),
+        "linearity_clos": round(lin_clos["linearity"], 5),
+        "ref": dict(REF),
+        "head_to_head": h,
+    }
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--chips", type=int, default=8192)
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--weeks", type=float, default=4.0)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="the < 30 s CI entry (bars + Table 6 gap + linearity)",
+    )
+    ap.add_argument(
+        "--no-reprice", action="store_true",
+        help="skip netsim repricing (sampling-only availability)",
+    )
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="write seed 0's failure/recovery timeline as a Perfetto trace",
+    )
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        derived, ref = availability_smoke()
+        for k, v in derived.items():
+            print(f"{k}={v}")
+        doc = {"suite": "availability_smoke", "derived": derived, "ref": ref}
+        failures = sum(1 for v in derived.values() if v is False)
+    else:
+        doc = full_summary(
+            args.chips, tuple(range(args.seeds)), args.weeks,
+            reprice=not args.no_reprice,
+        )
+        h = doc.pop("head_to_head")
+        print(
+            f"UB-Mesh  avail {doc['ub']['availability']:.5f} "
+            f"goodput {doc['ub']['goodput']:.5f}"
+        )
+        print(
+            f"Clos     avail {doc['clos']['availability']:.5f} "
+            f"goodput {doc['clos']['goodput']:.5f}"
+        )
+        print(
+            f"gap {doc['availability_gap']:.4f} (paper ~0.072, analytic "
+            f"{doc['analytic_gap']:.4f}) | linearity UB "
+            f"{doc['linearity_ub']:.4f} vs Clos {doc['linearity_clos']:.4f}"
+        )
+        if args.trace:
+            campaign_trace(h["ub"].runs[0], path=args.trace)
+            print(f"trace: {args.trace}", file=sys.stderr)
+        failures = int(abs(doc["availability_gap"] - REF["availability_gap"]) > 0.02)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2, default=str)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -151,12 +151,19 @@ def main() -> None:
         failures += 1
         rows.append(f"topo_search,0,ERROR={type(e).__name__}:{e}")
         CODESIGN_BENCHMARKS = {}
+    try:
+        from benchmarks.availability_bench import AVAILABILITY_BENCHMARKS
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        rows.append(f"availability_bench,0,ERROR={type(e).__name__}:{e}")
+        AVAILABILITY_BENCHMARKS = {}
 
     if args.suite == "smoke":
         benchmarks = {
             **SMOKE_BENCHMARKS,
             **PLANNER_BENCHMARKS,
             **CODESIGN_BENCHMARKS,
+            **AVAILABILITY_BENCHMARKS,
         }
     elif args.suite == "scale":
         from benchmarks.netsim_scale import SCALE_BENCHMARKS
@@ -170,6 +177,7 @@ def main() -> None:
             **NETSIM_BENCHMARKS,
             **PLANNER_BENCHMARKS,
             **CODESIGN_BENCHMARKS,
+            **AVAILABILITY_BENCHMARKS,
         }
     for name, fn in benchmarks.items():
         t0 = time.perf_counter()

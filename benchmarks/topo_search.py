@@ -64,8 +64,10 @@ from repro.core.perf_model import (
     AnalyticPerfModel,
     precalibrate_models,
 )
+from repro.core.availability import clos_afr
 from repro.core.planner import Prefilter, enumerate_specs, memory_feasible, plan
 from repro.core.traffic import backend_comparison_workloads
+from repro.runtime.campaign import availability_score, unavailability_for_afr
 
 _CAL_BYTES = 16e6
 
@@ -126,10 +128,20 @@ def sweep_geometries(
 
     Returns a dict with the surviving candidates' ``DesignPoint``s, the
     frontier, per-stage wall times and the calibration session stats.
-    The caller owns memo/cache hygiene (see ``_cold_sweep``)."""
+    The caller owns memo/cache hygiene (see ``_cold_sweep``).
+
+    Every candidate is scored on the third dominance axis —
+    Monte-Carlo unavailability from its own component-count AFRs
+    (``runtime.campaign.availability_score``, sampling-only, seeded) —
+    *before* the cull, so the extended ``prefilter_geometries``
+    conjunct stays winner-safe: a candidate is only dropped when some
+    survivor beats its analytic step/TCO bounds AND its exact
+    availability score."""
     t0 = time.perf_counter()
+    ua = {c.name: availability_score(c, chips) for c in candidates}
     survivors, culled, bounds = prefilter_geometries(
-        w, candidates, chips, margin=margin
+        w, candidates, chips, margin=margin,
+        unavailability=[ua[c.name] for c in candidates],
     )
     prefilter_s = time.perf_counter() - t0
 
@@ -165,6 +177,7 @@ def sweep_geometries(
                 name=cand.name,
                 step_time_s=best.iteration_s,
                 tco=cand.bom(chips).tco(),
+                unavailability=ua[cand.name],
                 meta={
                     "spec": str(best.spec),
                     "candidate": cand,
@@ -242,11 +255,16 @@ def baseline_points(w, chips: int) -> list[DesignPoint]:
         hybrid_bom(chips, fm_dims=1, inter_lanes=16),
         clos_bom(chips),
     ]
+    # switched-fabric availability axis: all three baselines lean on the
+    # optical-heavy Clos profile (Table 6's contrast is UB vs Clos; the
+    # hybrids' exact mix sits between, so this flatters no UB candidate)
+    base_ua = unavailability_for_afr(clos_afr(chips))
     return [
         DesignPoint(
             name=b.name,
             step_time_s=clos_step / _BASELINE_PERF[b.name],
             tco=b.tco(),
+            unavailability=base_ua,
             meta={
                 "capex": b.capex(),
                 "network_share": b.network_share(),
@@ -394,6 +412,11 @@ def codesign_smoke():
         "ce_gain_within_2pct": abs(ce_gain - 2.04) / 2.04 <= 0.02,
         "network_share_clos": round(share_clos, 3),
         "network_share_ub": round(share_ub, 3),
+        "availability_axis_scored": all(p.unavailability > 0 for p in points),
+        "ub_more_available_than_clos": (
+            min(p.unavailability for p in points)
+            < unavailability_for_afr(clos_afr(chips))
+        ),
     }
     ref = {
         "ce_gain": 2.04,
@@ -417,6 +440,7 @@ def _point_doc(p: DesignPoint) -> dict:
         "name": p.name,
         "step_time_s": round(p.step_time_s, 4),
         "tco": round(p.tco, 1),
+        "unavailability": round(p.unavailability, 6),
         "cost_efficiency": p.cost_efficiency,
         "spec": p.meta.get("spec"),
         "network_share": round(p.meta["network_share"], 4)

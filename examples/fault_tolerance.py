@@ -37,6 +37,16 @@ print(f"\nlink {link} failed: {stats['affected_flows']} flows rerouted, "
       f"(vs {stats['control_messages_flood']} flood messages), "
       f"recovered in {stats['recovery_wall_s']*1e3:.1f} ms (control plane)")
 
+# --- spare-pool exhaustion: structured outcome, restock ----------------------
+rec2 = fo.fail(logical=7)                 # the +1 spare is already in use
+print(f"NPU-7 failed with the pool empty -> kind={rec2['kind']}, "
+      f"failed_count={rec2['failed_count']} (policy engine decides: wait "
+      f"for restock, checkpoint-restore, or elastic shrink)")
+fo.restock(rec["failed_physical"])        # field service swapped NPU-3's board
+rec3 = fo.fail(logical=9)
+print(f"after restock, NPU-9 failed -> kind={rec3['kind']} "
+      f"(backup NPU {rec3['backup_physical']})")
+
 # --- supervisor: heartbeat -> recovery plan ---------------------------------
 sup = TrainingSupervisor(n_workers=8, heartbeat_timeout_s=0.0)
 dead = sup.dead_workers()

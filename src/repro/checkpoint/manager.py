@@ -71,7 +71,12 @@ class CheckpointManager:
                 "shapes": {k: list(v.shape) for k, v in host.items()},
                 "dtypes": {k: str(v.dtype) for k, v in host.items()},
             }
-            (out / "meta.json").write_text(json.dumps(meta))
+            # commit marker: write to a temp name then rename, so a crash
+            # mid-write can never leave a truncated meta.json that makes a
+            # partial checkpoint look committed
+            tmp = out / "meta.json.tmp"
+            tmp.write_text(json.dumps(meta))
+            tmp.replace(out / "meta.json")
             self._gc()
 
         self._thread = threading.Thread(target=write, daemon=True)

@@ -52,48 +52,64 @@ PAPER_MTTR_HOURS = 1.25            # 75 minutes
 FAST_MTTR_HOURS = 13.0 / 60.0      # 10 min locate + 3 min migrate (§6.6)
 
 
+# per-unit AFRs (failures/year/unit), calibrated against Table 6 given the
+# component counts of an 8K system — shared by `derived_afr`, the per-
+# GeometryCandidate availability scoring (`superpod_afr`) and the campaign's
+# failure-class rate builder
+AFR_PER_UNIT = {
+    "passive_electrical": 1.0e-4,
+    "active_electrical": 6.0e-4,
+    "optical_100m": 1.3e-3,
+    "optical_1km": 1.3e-3,
+    "lrs": 3.5e-2,
+    "hrs": 3.5e-2,
+}
+
+
+def superpod_afr(sp: SuperPod, name: str = "UB-Mesh(derived)") -> AFRBreakdown:
+    """Component-count AFR breakdown for an arbitrary SuperPod geometry —
+    the per-candidate form of :func:`derived_afr`'s UB-Mesh leg, so the
+    codesign sweep can score availability for every `GeometryCandidate`."""
+    cb = sp.cables_by_link_type()
+    return AFRBreakdown(
+        name,
+        electrical_cable=(
+            cb.get("passive_electrical", 0) * AFR_PER_UNIT["passive_electrical"]
+            + cb.get("active_electrical", 0) * AFR_PER_UNIT["active_electrical"]
+        ),
+        optical_cable=(
+            cb.get("optical_100m", 0) * AFR_PER_UNIT["optical_100m"]
+            + cb.get("optical_1km", 0) * AFR_PER_UNIT["optical_1km"]
+        ),
+        lrs=sp.lrs_count() * AFR_PER_UNIT["lrs"],
+        hrs=sp.hrs_count() * AFR_PER_UNIT["hrs"],
+    )
+
+
+def clos_afr(n_npus: int, name: str = "Clos(derived)") -> AFRBreakdown:
+    """Component-count AFR breakdown for the Clos baseline fabric."""
+    fab = ClosFabric(n_npus=n_npus)
+    cc = fab.cables_by_link_type()
+    return AFRBreakdown(
+        name,
+        electrical_cable=n_npus * 2 * AFR_PER_UNIT["passive_electrical"],
+        optical_cable=(
+            cc.get("optical_100m", 0) * AFR_PER_UNIT["optical_100m"]
+            + cc.get("optical_1km", 0) * AFR_PER_UNIT["optical_1km"]
+        ),
+        lrs=0.0,
+        hrs=fab.hrs_count() * AFR_PER_UNIT["hrs"],
+    )
+
+
 def derived_afr(n_npus: int = 8192) -> tuple[AFRBreakdown, AFRBreakdown]:
     """AFRs computed from our topology objects' component counts.
 
     Per-unit AFRs (failures/year/unit) calibrated against Table 6 given the
     component counts of an 8K system.
     """
-    afr_unit = {
-        "passive_electrical": 1.0e-4,
-        "active_electrical": 6.0e-4,
-        "optical_100m": 1.3e-3,
-        "optical_1km": 1.3e-3,
-        "lrs": 3.5e-2,
-        "hrs": 3.5e-2,
-    }
     sp = SuperPod(n_pods=max(1, n_npus // 1024))
-    cb = sp.cables_by_link_type()
-    ub = AFRBreakdown(
-        "UB-Mesh(derived)",
-        electrical_cable=(
-            cb.get("passive_electrical", 0) * afr_unit["passive_electrical"]
-            + cb.get("active_electrical", 0) * afr_unit["active_electrical"]
-        ),
-        optical_cable=(
-            cb.get("optical_100m", 0) * afr_unit["optical_100m"]
-            + cb.get("optical_1km", 0) * afr_unit["optical_1km"]
-        ),
-        lrs=sp.lrs_count() * afr_unit["lrs"],
-        hrs=sp.hrs_count() * afr_unit["hrs"],
-    )
-    fab = ClosFabric(n_npus=n_npus)
-    cc = fab.cables_by_link_type()
-    clos = AFRBreakdown(
-        "Clos(derived)",
-        electrical_cable=n_npus * 2 * afr_unit["passive_electrical"],
-        optical_cable=(
-            cc.get("optical_100m", 0) * afr_unit["optical_100m"]
-            + cc.get("optical_1km", 0) * afr_unit["optical_1km"]
-        ),
-        lrs=0.0,
-        hrs=fab.hrs_count() * afr_unit["hrs"],
-    )
-    return ub, clos
+    return superpod_afr(sp), clos_afr(n_npus)
 
 
 # --- 64+1 backup NPU (paper §3.3.2, Fig. 9) --------------------------------

@@ -284,6 +284,7 @@ def prefilter_geometries(
     margin: float = 5.0,
     max_tp: int = 64,
     microbatch_options: tuple[int, ...] = (1, 2, 4, 8, 13, 16, 32),
+    unavailability: "Sequence[float] | None" = None,
 ) -> tuple[list[GeometryCandidate], list[GeometryCandidate], list[GeometryBounds]]:
     """Cull Pareto-dominated geometries before netsim pricing.
 
@@ -292,7 +293,14 @@ def prefilter_geometries(
     measured step times turn out to be, ``j``'s (step, TCO) dominates
     ``i``'s, so ``i`` cannot sit on the measured frontier.  Winner-safe:
     TCO is exact and the step bounds bracket the measurement (see
-    :func:`geometry_bounds`).  Returns ``(survivors, culled, bounds)``.
+    :func:`geometry_bounds`).
+
+    ``unavailability`` (aligned with ``candidates``) extends dominance to
+    the third Pareto axis: when given, ``j`` must ALSO be no less
+    available than ``i`` to cull it — the scores are exact per candidate
+    (the same deterministic Monte-Carlo number later attached to the
+    ``DesignPoint``), so the cull stays winner-safe on the 3-axis
+    frontier.  Returns ``(survivors, culled, bounds)``.
     """
     bounds = geometry_bounds(
         w,
@@ -309,7 +317,13 @@ def prefilter_geometries(
     cheaper_eq = tco[None, :] <= tco[:, None]
     faster_eq = ub[None, :] <= lb[:, None]
     strict = (tco[None, :] < tco[:, None]) | (ub[None, :] < lb[:, None])
-    culled_mask = (cheaper_eq & faster_eq & strict).any(axis=1)
+    dominated = cheaper_eq & faster_eq & strict
+    if unavailability is not None:
+        if len(unavailability) != len(candidates):
+            raise ValueError("unavailability must align with candidates")
+        ua = np.array(list(unavailability), dtype=float)
+        dominated &= ua[None, :] <= ua[:, None]
+    culled_mask = dominated.any(axis=1)
     survivors = [c for c, x in zip(candidates, culled_mask) if not x]
     culled = [c for c, x in zip(candidates, culled_mask) if x]
     return survivors, culled, bounds
@@ -332,11 +346,16 @@ class DesignPoint:
     name: str
     step_time_s: float
     tco: float
+    # third dominance axis (minimized): 1 - measured availability from the
+    # Monte-Carlo campaign (`runtime.campaign.availability_score`).  The
+    # default 0.0 keeps two-objective usage byte-identical: equal third
+    # components never decide dominance.
+    unavailability: float = 0.0
     meta: dict = field(default_factory=dict, compare=False)
 
     @property
     def fitness(self) -> tuple[float, ...]:
-        return (self.step_time_s, self.tco)
+        return (self.step_time_s, self.tco, self.unavailability)
 
     def __gt__(self, other: "DesignPoint") -> bool:
         s, o = self.fitness, other.fitness

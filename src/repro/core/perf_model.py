@@ -247,8 +247,22 @@ class NetsimPerfModel:
     # measurement session (the pre-template-cache behavior) — the per-spec
     # baseline leg of benchmarks/netsim_scale.netsim_planner_throughput
     reuse_wire_template: bool = True
+    # degraded-mesh repricing (runtime/campaign.py): chip-level links dead
+    # from t=0 in every measurement — calibration DAGs route around them
+    # through APR reroute, so the profile prices the POST-FAILURE fabric.
+    # Only the axes whose dims contain a failed link get degraded cache
+    # keys; unaffected axes keep their healthy keys (box-confined routing
+    # never crosses the failure), which is what makes repricing
+    # incremental: the first degraded query measures only the hit axes and
+    # every healthy axis is a memo/disk hit.
+    failed_links: "tuple[tuple[int, int], ...]" = ()
 
     def __post_init__(self) -> None:
+        if self.failed_links and self.detail_racks:
+            raise ValueError(
+                "failed_links and detail_racks cannot combine: degraded "
+                "repricing runs on the isolated chip-level pod"
+            )
         if self.detail_racks and self.superpod is None:
             # without a SuperPod there is no coarse mesh to embed the
             # detail racks in — silently falling back to the isolated
@@ -298,6 +312,34 @@ class NetsimPerfModel:
             detail_tag = ("detail", tuple(self.detail_racks), bg_bytes)
         return key_base, coarse_tag, detail_tag, bg_bytes
 
+    def _degraded_axes(self) -> frozenset:
+        """Chip-level axes whose calibration DAGs can see a failed link.
+
+        An axis is affected iff some failed link's dimension belongs to
+        the axis' dim set (model = dims 0-1, data = the rest): calibration
+        DAGs are built at the base corner and routing is box-confined
+        under SHORTEST/DETOUR, so a flow only ever traverses links of its
+        own axis' dimensions.  The coarse "pod" axis is never affected by
+        chip-level failures."""
+        if not self.failed_links:
+            return frozenset()
+        ndim = len(self.topo.shape)
+        axis_dims = {"model": (0, 1)}
+        if ndim > 2:
+            axis_dims["data"] = tuple(range(2, ndim))
+        hit = set()
+        for u, v in self.failed_links:
+            d = self.topo.are_adjacent(u, v)
+            if d is None:
+                raise ValueError(
+                    f"failed link ({u}, {v}) is not a physical link of the "
+                    "topology"
+                )
+            for a, dims in axis_dims.items():
+                if d in dims:
+                    hit.add(a)
+        return frozenset(hit)
+
     def _store_kind(self, axis: str, detail_tag: tuple) -> str:
         """Which persistent-cache file an axis' measurements live in —
         mirrors the in-memory key composition exactly."""
@@ -305,6 +347,8 @@ class NetsimPerfModel:
             return "pod"
         if axis == "model" and detail_tag:
             return "mixed"
+        if axis in self._degraded_axes():
+            return "degraded"
         return "chip"
 
     def _disk_cache(self) -> "object | None":
@@ -338,6 +382,13 @@ class NetsimPerfModel:
         ``precalibrate_models`` sweep path so keys always compose the same
         way.  Returns ``(key, store_configs, detail_tag, bg_bytes)``."""
         key_base, coarse_tag, detail_tag, bg_bytes = self._tags()
+        degraded_axes = self._degraded_axes()
+        degraded_tag = ()
+        if degraded_axes:
+            degraded_tag = (
+                "degraded",
+                tuple(sorted(tuple(sorted(l)) for l in self.failed_links)),
+            )
 
         def key(axis: str, shape: str, w: int | None) -> tuple:
             if shape == "reduce_scatter":
@@ -346,12 +397,15 @@ class NetsimPerfModel:
                 return key_base + coarse_tag + (axis, shape, w)
             if axis == "model" and detail_tag:
                 return key_base + coarse_tag + detail_tag + (axis, shape, w)
+            if axis in degraded_axes:
+                return key_base + degraded_tag + (axis, shape, w)
             return key_base + (axis, shape, w)
 
         store_configs = {
             "chip": list(key_base),
             "pod": list(key_base + coarse_tag),
             "mixed": list(key_base + coarse_tag + detail_tag),
+            "degraded": list(key_base + degraded_tag),
         }
         return key, store_configs, detail_tag, bg_bytes
 
@@ -449,6 +503,35 @@ class NetsimPerfModel:
             for axis, mshape, w in chip_keys:
                 _record_measurement(axis, mshape, w, dt)
                 store(axis, mshape, w, "chip", measured[(axis, mshape, w)])
+        degraded_keys = [
+            k for k, kind in to_measure.items() if kind == "degraded"
+        ]
+        if degraded_keys:
+            # affected axes re-measure on the failed-link mesh; APR reroute
+            # happens inside netsim (can_batch_calibration is False there,
+            # so measure_profile_batch falls back to sequential runs)
+            dsim = NetSim(
+                self.topo,
+                routing=self.base.routing,
+                latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
+                reuse_wire_template=self.reuse_wire_template,
+                failed_links=self.failed_links,
+            )
+            t0 = time.perf_counter()
+            dmeasured = dsim.measure_profile_batch(
+                self.size_bytes,
+                degraded_keys,
+                comm=self.base,
+                batch_size=max(1, self.batch_size),
+                stats=_CALIBRATION_STATS,
+            )
+            dt = (time.perf_counter() - t0) / len(degraded_keys)
+            for axis, mshape, w in degraded_keys:
+                _record_measurement(axis, mshape, w, dt)
+                store(
+                    axis, mshape, w, "degraded", dmeasured[(axis, mshape, w)]
+                )
         pod_keys = [k for k, kind in to_measure.items() if kind == "pod"]
         if pod_keys:
             from ..netsim.coarsen import (
@@ -775,6 +858,19 @@ def precalibrate_models(
         for p in (specs if specs else [None]):
             keys.update((a, s, w) for (a, s), w in m._widths(p).items())
         total_keys += len(keys)
+        if m.failed_links:
+            # degraded models cannot share relocated solver sessions (the
+            # failure breaks translation symmetry) — resolve them through
+            # the per-model sequential path and keep ctx aligned
+            if keys:
+                m._calibrate_keys(sorted(keys, key=str))
+            ctx.append({
+                "key": None,
+                "store_configs": None,
+                "disk": None,
+                "new_by_kind": {},
+            })
+            continue
         key, store_configs, detail_tag, _bg = m._key_context()
         missing = {k for k in keys if key(*k) not in _CALIBRATION_CACHE}
         _CALIBRATION_STATS["hits"] += len(keys) - len(missing)

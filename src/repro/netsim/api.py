@@ -203,6 +203,7 @@ class NetSim:
         axis_dims: dict[str, tuple[int, ...]] | None = None,
         telemetry: bool = False,
         reuse_wire_template: bool = True,
+        failed_links: "tuple[tuple[int, int], ...]" = (),
     ) -> None:
         self.topo = topo or ub_mesh_pod()
         self.routing = routing
@@ -243,6 +244,15 @@ class NetSim:
         # the per-topology template cache (flows._WIRE_TEMPLATES) — only
         # the throughput benchmark's pre-cache baseline wants this
         self.reuse_wire_template = reuse_wire_template
+        # links dead from t=0 in EVERY run of this sim — the degraded-mesh
+        # repricing hook: calibration DAGs route around them through the
+        # live APR machinery (candidate paths skip dead links), so a
+        # ``calibrated_profile`` on a failed-link NetSim measures the
+        # post-reroute bandwidth of the degraded fabric.  Aggregate ring
+        # steps are force-expanded per pair (reroute needs per-flow paths)
+        # and batched calibration is disabled (a failure breaks the
+        # translation symmetry relocation relies on).
+        self.failed_links = tuple(tuple(l) for l in failed_links)
         self.last_network: FluidNetwork | None = None   # post-run inspection
         self.last_telemetry: Telemetry | None = None
 
@@ -260,6 +270,8 @@ class NetSim:
             telemetry=tel,
             reuse_wire_template=self.reuse_wire_template,
         )
+        for u, v in self.failed_links:
+            net.fail_link(u, v)         # dead from t=0; no flows exist yet
         return Router(
             net,
             self.routing,
@@ -285,7 +297,7 @@ class NetSim:
         routed sends so APR rerouting stays per-flow."""
         router = self._fresh()
         net = router.net
-        use_agg = self.aggregate and fail_link is None
+        use_agg = self.aggregate and fail_link is None and not self.failed_links
         run = _DagRun(router, dag, self.latency_s, aggregate=use_agg)
         fail_stats: dict = {}
         if fail_link is not None:
@@ -327,8 +339,9 @@ class NetSim:
         the shared network's, averaged over that DAG's own makespan."""
         router = self._fresh()
         net = router.net
+        use_agg = self.aggregate and not self.failed_links
         runs = [
-            _DagRun(router, dag, self.latency_s, aggregate=self.aggregate)
+            _DagRun(router, dag, self.latency_s, aggregate=use_agg)
             for dag in dags
         ]
         for run in runs:
@@ -649,6 +662,8 @@ class NetSim:
         BORROW breaks this with its global switch plane."""
         if self.routing == Routing.BORROW:
             return False
+        if self.failed_links:
+            return False                # a failure breaks translation symmetry
         if getattr(self.topo, "link_gbs", None) is not None:
             return False                # heterogeneous link capacities
         if isinstance(self.rx_gbs, dict):

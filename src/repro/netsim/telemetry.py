@@ -538,3 +538,60 @@ class Telemetry:
             with open(path, "w") as fh:
                 json.dump(trace, fh)
         return trace
+
+
+def perfetto_doc(
+    counters: "dict[str, list[tuple[float, float]]]" = {},
+    spans: "list[dict]" = [],
+    instants: "list[tuple[float, str, dict]]" = [],
+    *,
+    time_scale: float = 1e6,
+    path: str | None = None,
+) -> dict:
+    """Assemble a Chrome trace-event JSON from plain timeline data.
+
+    The generic sibling of :meth:`Telemetry.to_perfetto` for producers
+    that are not a FluidNetwork — e.g. the availability campaign's
+    week-scale failure/goodput timelines.  ``counters`` maps track name
+    to ``(t, value)`` samples (ph "C"); ``spans`` are dicts with
+    ``name``/``start``/``end`` plus optional ``lane`` and ``args``
+    (ph "X", one tid per lane); ``instants`` are ``(t, name, args)``
+    (ph "i").  Times are scaled by ``time_scale`` into trace-event
+    microseconds (1e6 = input in seconds; use 3600e6 for hours)."""
+    ev: list[dict] = [
+        {"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+         "args": {"name": "counters"}},
+        {"ph": "M", "pid": 2, "tid": 0, "name": "process_name",
+         "args": {"name": "spans"}},
+    ]
+    for name, series in counters.items():
+        for t, v in series:
+            ev.append(
+                {"name": name, "ph": "C", "ts": t * time_scale, "pid": 1,
+                 "tid": 0, "args": {"value": v}}
+            )
+    lanes: dict[str, int] = {}
+    for span in spans:
+        lane = span.get("lane", span["name"])
+        tid = lanes.setdefault(lane, len(lanes) + 1)
+        ev.append(
+            {"name": span["name"], "ph": "X",
+             "ts": span["start"] * time_scale,
+             "dur": max(0.0, span["end"] - span["start"]) * time_scale,
+             "pid": 2, "tid": tid, "args": span.get("args", {})}
+        )
+    for lane, tid in lanes.items():
+        ev.append(
+            {"ph": "M", "pid": 2, "tid": tid, "name": "thread_name",
+             "args": {"name": lane}}
+        )
+    for t, name, args in instants:
+        ev.append(
+            {"name": name, "ph": "i", "ts": t * time_scale, "pid": 2,
+             "tid": 0, "s": "g", "args": args}
+        )
+    trace = {"traceEvents": ev, "displayTimeUnit": "ms"}
+    if path is not None:
+        with open(path, "w") as fh:
+            json.dump(trace, fh)
+    return trace

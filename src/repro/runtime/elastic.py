@@ -38,6 +38,32 @@ class ElasticPlan:
         # linear-scaling rule when the batch actually changes
         return self.lr_scale * self.new_dp / self.old_dp
 
+    @property
+    def capacity_fraction(self) -> float:
+        """Throughput fraction retained by the shrunken job — the
+        goodput multiplier the availability campaign charges while a
+        shrink is in effect (per-replica step time is unchanged; only
+        replica count drops)."""
+        return self.new_dp / self.old_dp
+
+
+def shrink_plan(
+    old_dp: int, old_global_batch: int, lost_chips: int, total_chips: int
+) -> ElasticPlan:
+    """The DP-shrink plan for losing ``lost_chips`` of ``total_chips``:
+    drop the DP replicas that lived on the lost capacity (at least one),
+    keeping per-replica batch constant (the global batch shrinks with
+    the fleet — the linear-scaling LR rule applies on resume)."""
+    chips_per_replica = max(1, total_chips // max(1, old_dp))
+    lost_replicas = -(-lost_chips // chips_per_replica)  # ceil
+    new_dp = max(1, old_dp - lost_replicas)
+    return ElasticPlan(
+        old_dp=old_dp,
+        new_dp=new_dp,
+        old_global_batch=old_global_batch,
+        keep_global_batch=False,
+    )
+
 
 def rescale(
     manager,

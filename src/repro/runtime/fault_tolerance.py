@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 from repro.core.apr import RoutePlan, all_paths
 from repro.core.topology import NDFullMesh, ub_mesh_rack
@@ -26,6 +27,24 @@ from repro.core.topology import NDFullMesh, ub_mesh_rack
 # ---------------------------------------------------------------------------
 # 64+1 backup NPU (paper §3.3.2, Fig. 9)
 # ---------------------------------------------------------------------------
+
+
+class SparesExhausted(dict):
+    """Structured spare-pool-empty outcome of :meth:`RackFailover.fail`.
+
+    A dict subclass so callers can both ``isinstance``-check the outcome
+    (the policy-engine path: degrade to checkpoint-restore / elastic
+    shrink) and read fields like any other recovery record.  Carries
+    ``kind="spares_exhausted"``, the logical/physical ids of the
+    unrecovered failure and the rack's failure count."""
+
+    def __init__(self, logical: int, failed_physical: int, failed_count: int):
+        super().__init__(
+            kind="spares_exhausted",
+            logical=logical,
+            failed_physical=failed_physical,
+            failed_count=failed_count,
+        )
 
 
 @dataclass
@@ -52,13 +71,19 @@ class RackFailover:
 
         Returns the recovery record: which physical npu replaced it and
         which direct links became 1-hop LRS routes (Fig. 9's 5-3 ->
-        5-LRS-B redirection).
+        5-LRS-B redirection).  When the spare pool is empty the failure
+        is still recorded but the outcome is a :class:`SparesExhausted`
+        record (``kind="spares_exhausted"``) instead of an exception —
+        the caller's policy engine decides whether to wait for a
+        restock, restore from checkpoint, or shrink the job elastically.
         """
         phys = self.logical_to_physical[logical]
         self.failed.add(phys)
         if not self.spares:
-            raise RuntimeError(
-                "no spare NPU left — supervisor must shrink the job (elastic)"
+            return SparesExhausted(
+                logical=logical,
+                failed_physical=phys,
+                failed_count=len(self.failed),
             )
         spare = self.spares.pop(0)
         self.logical_to_physical[logical] = spare
@@ -67,12 +92,21 @@ class RackFailover:
             for peer, _dim in self.rack.all_neighbors(phys if phys < self.rack.num_nodes else 0)
         ]
         return {
+            "kind": "backup",
             "logical": logical,
             "failed_physical": phys,
             "backup_physical": spare,
             "redirected_links": len(redirected),
             "extra_hops": 1,
         }
+
+    def restock(self, physical: int) -> None:
+        """Return a repaired NPU to the spare pool (field service swapped
+        the failed board).  The physical id re-enters as a spare — the
+        logical slot it used to hold stays on whatever replaced it."""
+        self.failed.discard(physical)
+        if physical not in self.spares and physical not in self.logical_to_physical:
+            self.spares.append(physical)
 
     def translate(self, logical: int) -> int:
         return self.logical_to_physical[logical]
@@ -116,15 +150,22 @@ class WorkerState:
 
 
 class TrainingSupervisor:
-    """Heartbeat-driven failure detection + restart orchestration."""
+    """Heartbeat-driven failure detection + restart orchestration.
+
+    ``clock`` injects the time source (a zero-arg callable returning
+    seconds).  The default stays ``time.monotonic`` for live use; tests
+    and the Monte-Carlo campaign pass a simulated clock so detection is
+    deterministic and replayable per seed."""
 
     def __init__(
         self,
         n_workers: int,
         heartbeat_timeout_s: float = 10.0,
         straggler_factor: float = 3.0,
+        clock: Callable[[], float] | None = None,
     ):
-        now = time.monotonic()
+        self._clock = clock if clock is not None else time.monotonic
+        now = self._clock()
         self.workers = {i: WorkerState(now) for i in range(n_workers)}
         self.timeout = heartbeat_timeout_s
         self.straggler_factor = straggler_factor
@@ -133,7 +174,7 @@ class TrainingSupervisor:
 
     def heartbeat(self, worker: int, step: int, step_time_s: float | None = None):
         w = self.workers[worker]
-        w.last_heartbeat = time.monotonic()
+        w.last_heartbeat = self._clock()
         w.step = step
         if step_time_s is not None:
             self.step_times.append(step_time_s)
@@ -150,7 +191,9 @@ class TrainingSupervisor:
                 w.slow_strikes = 0
 
     def dead_workers(self, now: float | None = None) -> list[int]:
-        now = now or time.monotonic()
+        # `now is None` check, not truthiness: a simulated clock
+        # legitimately reads 0.0 at t=0
+        now = self._clock() if now is None else now
         return [
             i for i, w in self.workers.items()
             if now - w.last_heartbeat > self.timeout
@@ -160,11 +203,11 @@ class TrainingSupervisor:
         """Decide the recovery action for a set of dead workers."""
         actions = []
         for w in dead:
-            try:
-                rec = failover.fail(w % failover.rack.num_nodes)
-                actions.append({"kind": "backup", **rec})
-            except RuntimeError:
-                actions.append({"kind": "elastic_shrink", "worker": w})
+            rec = failover.fail(w % failover.rack.num_nodes)
+            if isinstance(rec, SparesExhausted):
+                actions.append({**rec, "kind": "elastic_shrink", "worker": w})
+            else:
+                actions.append(rec | {"worker": w})
         self.events.extend(actions)
         return {
             "actions": actions,

@@ -198,11 +198,13 @@ class TestFaultTolerance:
         assert fo.translate(3) == 64
         assert not fo.degraded
 
-    def test_no_spare_raises(self):
+    def test_no_spare_returns_structured_exhaustion(self):
         fo = RackFailover(n_backups=1)
         fo.fail(1)
-        with pytest.raises(RuntimeError):
-            fo.fail(2)
+        rec = fo.fail(2)
+        assert rec["kind"] == "spares_exhausted"
+        assert rec["failed_count"] == 2
+        assert fo.degraded
 
     def test_supervisor_detects_dead(self):
         sup = TrainingSupervisor(n_workers=4, heartbeat_timeout_s=1000.0)
