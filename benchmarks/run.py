@@ -157,6 +157,12 @@ def main() -> None:
         failures += 1
         rows.append(f"availability_bench,0,ERROR={type(e).__name__}:{e}")
         AVAILABILITY_BENCHMARKS = {}
+    try:
+        from benchmarks.serving_bench import SERVING_BENCHMARKS
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        rows.append(f"serving_bench,0,ERROR={type(e).__name__}:{e}")
+        SERVING_BENCHMARKS = {}
 
     if args.suite == "smoke":
         benchmarks = {
@@ -164,6 +170,7 @@ def main() -> None:
             **PLANNER_BENCHMARKS,
             **CODESIGN_BENCHMARKS,
             **AVAILABILITY_BENCHMARKS,
+            **SERVING_BENCHMARKS,
         }
     elif args.suite == "scale":
         from benchmarks.netsim_scale import SCALE_BENCHMARKS
@@ -178,6 +185,7 @@ def main() -> None:
             **PLANNER_BENCHMARKS,
             **CODESIGN_BENCHMARKS,
             **AVAILABILITY_BENCHMARKS,
+            **SERVING_BENCHMARKS,
         }
     for name, fn in benchmarks.items():
         t0 = time.perf_counter()

@@ -1,0 +1,219 @@
+"""Latency-calibrated decode-serving benchmark + SLO-vs-QPS sweep CLI.
+
+``serve_decode_smoke`` (the ``run.py --suite smoke`` entry, < 30 s):
+
+* **Closed-form anchors** — the message-level engine on an idle rack
+  must match alpha-beta arithmetic: a one-hop p2p costs exactly
+  ``size/cap + latency`` and the 8-clique ring AllReduce lands within 2%
+  of the fluid model's makespan for the same DAG (uncongested, the two
+  models price identical wire time).
+* **Incast tail** — the A2A dispatch's measured p99 task latency
+  exceeds its p50: ejection-port queueing is visible, which the fluid
+  model's flat launch latency cannot represent.
+* **SLO divergence** — ``launch.serve.plan_decode`` on a dense-70B
+  decode across one 64-chip rack: the bandwidth-priced objective picks
+  maximum TP (smallest weight shard to stream) while the
+  latency-calibrated SLO search picks a narrower TP x wider DP sharding
+  — and the simulated p99 confirms the bandwidth choice misses the SLO
+  the SLO choice meets.  The divergence IS the same-run regression
+  guard: each bar is recomputed from scratch every run, so a regression
+  in the message engine, the latency profile threading, or the serving
+  simulator flips a boolean and fails CI without needing a committed
+  baseline.
+
+The CLI writes the SLO-vs-QPS JSON CI uploads as an artifact::
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke \
+        --json slo_vs_qps.json
+    PYTHONPATH=src python -m benchmarks.serving_bench --qps 10 20 30 40
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core.traffic import WorkloadSpec
+from repro.launch.serve import (
+    DECODE_MSG_BYTES,
+    plan_decode,
+    rack_perf_model,
+)
+
+# the canonical serving config: dense-70B decode on one 64-chip rack
+SERVE_CHIPS = 64
+SERVE_QPS = 30.0
+SERVE_SLO_S = 0.012
+SERVE_BATCH = 8
+
+REF = {
+    # the regime claim ("99 Problems" / §2.3): decode messages are
+    # latency-bound, so collective cost scales with group width and the
+    # bandwidth-optimal sharding is not the SLO-optimal one
+    "diverged": True,
+}
+
+
+def serve_workload() -> WorkloadSpec:
+    return WorkloadSpec(
+        "dense-70B-serve", 80, 8192, 64, 128, 8,
+        seq_len=8192, global_batch=512, params_total=7e10,
+    )
+
+
+def serve_decode_smoke():
+    from repro.core.cost_model import Routing
+    from repro.netsim import NetSim
+    from repro.netsim.flows import _wire_structure
+    from repro.core.topology import ub_mesh_rack
+
+    t_start = time.perf_counter()
+    topo = ub_mesh_rack()
+    sim = NetSim(topo, routing=Routing.DETOUR)
+
+    # -- closed-form anchors -------------------------------------------
+    size = DECODE_MSG_BYTES
+    prof = sim.measure_latency_profile(size, widths={("model", "allreduce"): 8})
+    capacity, _ = _wire_structure(topo)
+    cap = capacity[(0, 1)]
+    p2p_closed = size / cap + sim.latency_s
+    p2p = prof.get("model", "p2p").total_s
+    p2p_err = abs(p2p - p2p_closed) / p2p_closed
+
+    from repro.netsim.collectives import clique_nodes, ring_allreduce
+
+    ring = ring_allreduce(topo, clique_nodes(topo, 0), size, tag="bench-ring")
+    fluid_t = sim.run_dag(ring).makespan_s
+    msg_t = prof.get("model", "allreduce").total_s
+    ring_err = abs(msg_t - fluid_t) / fluid_t
+
+    a2a = prof.get("model", "all_to_all")
+
+    # -- SLO-driven decode planning ------------------------------------
+    w = serve_workload()
+    perf = rack_perf_model()
+    res = plan_decode(
+        w, SERVE_CHIPS, perf,
+        qps=SERVE_QPS, slo_s=SERVE_SLO_S, batch=SERVE_BATCH,
+        duration_s=10.0,
+    )
+    bw, slo = res["bandwidth_choice"], res["slo_choice"]
+
+    wall = time.perf_counter() - t_start
+    derived = {
+        "p2p_us": round(p2p * 1e6, 3),
+        "p2p_closed_us": round(p2p_closed * 1e6, 3),
+        "p2p_within_2pct": p2p_err <= 0.02,
+        "ring_allreduce_us": round(msg_t * 1e6, 3),
+        "ring_fluid_us": round(fluid_t * 1e6, 3),
+        "ring_within_2pct_of_fluid": ring_err <= 0.02,
+        "a2a_p50_us": round(a2a.p50_s * 1e6, 3),
+        "a2a_p99_us": round(a2a.p99_s * 1e6, 3),
+        "a2a_tail_visible": a2a.p99_s > a2a.p50_s,
+        "bw_choice_tp": bw["tp"],
+        "slo_choice_tp": slo["tp"],
+        "bw_choice_p99_ms": round(bw["p99_s"] * 1e3, 2),
+        "slo_choice_p99_ms": round(slo["p99_s"] * 1e3, 2),
+        "slo_choice_tokens_per_s": round(slo["tokens_per_s"], 1),
+        "diverged": res["diverged"],
+        "slo_choice_meets_slo": slo["meets_slo"],
+        "bw_choice_misses_slo": not bw["meets_slo"],
+        "wall_s": round(wall, 2),
+        "under_30s": wall <= 30.0,
+    }
+    return derived, dict(REF)
+
+
+SERVING_BENCHMARKS = {"serve_decode_smoke": serve_decode_smoke}
+
+
+# ---------------------------------------------------------------------------
+# CLI: SLO-vs-QPS sweep (the CI artifact)
+# ---------------------------------------------------------------------------
+
+
+def slo_vs_qps(
+    qps_grid: "tuple[float, ...]",
+    *,
+    chips: int = SERVE_CHIPS,
+    slo_s: float = SERVE_SLO_S,
+    batch: int = SERVE_BATCH,
+    duration_s: float = 10.0,
+) -> dict:
+    """``plan_decode`` at each target QPS: how the SLO-driven sharding
+    and its headroom move as load grows (the bandwidth choice never
+    moves — that is the point)."""
+    w = serve_workload()
+    perf = rack_perf_model()
+    points = []
+    for qps in qps_grid:
+        r = plan_decode(
+            w, chips, perf, qps=qps, slo_s=slo_s, batch=batch,
+            duration_s=duration_s,
+        )
+        bw, slo = r["bandwidth_choice"], r["slo_choice"]
+        points.append({
+            "qps": qps,
+            "bw_tp": bw["tp"],
+            "bw_p99_s": bw["p99_s"],
+            "slo_tp": slo["tp"],
+            "slo_p99_s": slo["p99_s"],
+            "slo_tokens_per_s": slo["tokens_per_s"],
+            "slo_attainment": slo["attainment"],
+            "diverged": r["diverged"],
+        })
+    return {
+        "suite": "slo_vs_qps",
+        "workload": w.name,
+        "chips": chips,
+        "slo_s": slo_s,
+        "batch": batch,
+        "points": points,
+    }
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="the < 30 s CI entry (closed-form anchors + SLO divergence)",
+    )
+    ap.add_argument(
+        "--qps", type=float, nargs="+", default=(10.0, 20.0, 30.0, 40.0),
+        help="target request rates for the SLO-vs-QPS sweep",
+    )
+    ap.add_argument("--chips", type=int, default=SERVE_CHIPS)
+    ap.add_argument("--slo-ms", type=float, default=SERVE_SLO_S * 1e3)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args(argv)
+
+    failures = 0
+    doc: dict = {}
+    if args.smoke:
+        derived, ref = serve_decode_smoke()
+        for k, v in derived.items():
+            print(f"{k}={v}")
+        doc = {"suite": "serve_decode_smoke", "derived": derived, "ref": ref}
+        failures = sum(1 for v in derived.values() if v is False)
+    sweep = slo_vs_qps(
+        tuple(args.qps), chips=args.chips, slo_s=args.slo_ms / 1e3
+    )
+    for pt in sweep["points"]:
+        print(
+            f"qps={pt['qps']:g} slo_tp={pt['slo_tp']} "
+            f"p99={pt['slo_p99_s']*1e3:.2f}ms "
+            f"tok/s={pt['slo_tokens_per_s']:.0f} "
+            f"attainment={pt['slo_attainment']:.3f} "
+            f"diverged={pt['diverged']}"
+        )
+    doc = {**doc, **sweep} if doc else sweep
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2, default=str)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

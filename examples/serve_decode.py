@@ -1,4 +1,5 @@
-"""Batched serving example: prefill + autoregressive decode with KV cache.
+"""Batched serving example: prefill + autoregressive decode with KV cache,
+then SLO-driven decode planning on the latency-calibrated rack model.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,7 +12,39 @@ for arch in ("granite-8b", "rwkv6-1.6b", "mixtral-8x22b"):
     rc = subprocess.call([
         sys.executable, "-m", "repro.launch.serve",
         "--arch", arch, "--smoke",
-        "--batch", "2", "--prompt-len", "24", "--gen", "8",
+        "--batch", "2", "--prompt-len", "32", "--gen", "8",
     ])
     if rc:
         sys.exit(rc)
+
+# --- SLO-driven decode planning (no accelerator needed) -------------------
+# Price a dense-70B decode across one 64-chip rack two ways: the
+# bandwidth-calibrated objective (training-era pricing) and the
+# message-level latency profile, then pick the sharding that meets a p99
+# token-latency SLO at the target request rate.
+print("=== SLO-driven decode planning (dense-70B, one rack) ===")
+from repro.core.traffic import WorkloadSpec                    # noqa: E402
+from repro.launch.serve import plan_decode, rack_perf_model    # noqa: E402
+
+w = WorkloadSpec(
+    "dense-70B-serve", 80, 8192, 64, 128, 8,
+    seq_len=8192, global_batch=512, params_total=7e10,
+)
+res = plan_decode(
+    w, 64, rack_perf_model(), qps=30.0, slo_s=0.012, batch=8,
+    duration_s=10.0,
+)
+for c in res["candidates"]:
+    print(
+        f"  tp={c['tp']:3d} dp={c['dp']:3d} "
+        f"step(bw)={c['step_bandwidth_s']*1e3:7.3f}ms "
+        f"step(lat)={c['step_latency_s']*1e3:7.3f}ms "
+        f"p99={c['p99_s']*1e3:9.3f}ms meets_slo={c['meets_slo']}"
+    )
+bw, slo = res["bandwidth_choice"], res["slo_choice"]
+print(
+    f"bandwidth-optimal: tp={bw['tp']} x dp={bw['dp']} | "
+    f"SLO choice: tp={slo['tp']} x dp={slo['dp']} "
+    f"({slo['tokens_per_s']:.0f} tok/s at p99 {slo['p99_s']*1e3:.1f}ms)"
+)
+assert res["diverged"], "bandwidth and SLO objectives should disagree here"

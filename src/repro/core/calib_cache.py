@@ -32,6 +32,13 @@ The JSON payload::
     {"schema": 1, "solver": 1, "netsim": 1,
      "config": [...],                  # the un-hashed key, for humans
      "entries": {"model|allreduce|None": 141.84, ...}}
+
+Latency-mode profiles (``NetsimPerfModel.latency_profile``) ride the same
+format: their config carries a ``("latency-mode", size_bytes)`` tag so
+they land in a separate store file, and each ``LatencyStats`` field is one
+entry under a ``shape@field`` name — e.g.
+``"model|allreduce@p99_s|8": 2.1e-06`` — which the 3-part ``axis|shape|
+width`` key split parses unchanged.
 """
 
 from __future__ import annotations

@@ -239,6 +239,93 @@ class CalibrationProfile:
         return CommModel(axes=axes, routing=comm.routing)
 
 
+# the collective shapes a LatencyProfile distinguishes: the decode-serving
+# per-token ops (TP allreduce, EP dispatch/combine A2A, PP boundary p2p) —
+# latency calibration is for small-message shapes, so the bandwidth-only
+# all_gather/reduce_scatter pair stays out
+LATENCY_SHAPES = ("allreduce", "all_to_all", "p2p")
+
+
+def _percentile(sorted_vals: "list[float]", q: float) -> float:
+    """Nearest-rank-with-interpolation percentile over a pre-sorted list
+    (pure python — deterministic, no numpy dependency in core)."""
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+@dataclass(frozen=True)
+class LatencyStats:
+    """Message-level latency measurement of one (axis, shape) collective.
+
+    ``total_s`` is the collective's completion time (the number a
+    per-token decode step pays); ``p50_s``/``p99_s``/``mean_s`` summarize
+    the distribution of per-message ready-to-delivery latencies *within*
+    the run — queueing-inclusive, so an incast-heavy A2A dispatch shows a
+    p99 far above its p50 while an uncongested p2p has p50 == p99.
+    """
+
+    p50_s: float
+    p99_s: float
+    mean_s: float
+    total_s: float
+    n: int = 0
+
+    @staticmethod
+    def from_samples(samples: "list[float]", total_s: float) -> "LatencyStats":
+        vals = sorted(samples)
+        mean = sum(vals) / len(vals) if vals else 0.0
+        return LatencyStats(
+            p50_s=_percentile(vals, 0.50),
+            p99_s=_percentile(vals, 0.99),
+            mean_s=mean,
+            total_s=total_s,
+            n=len(vals),
+        )
+
+
+@dataclass(frozen=True)
+class LatencyProfile:
+    """Measured message-level latencies keyed by ``(axis, shape)``.
+
+    The latency-side sibling of :class:`CalibrationProfile`: where that
+    one carries effective GB/s from fluid (bandwidth) runs, this one
+    carries :class:`LatencyStats` from message-level runs
+    (``NetSim.measure_latency_profile``) at a decode-sized payload —
+    serialization + per-hop propagation + FIFO queueing, phenomena the
+    fluid model's single flat ``latency_s`` cannot see.  ``size_bytes``
+    records the per-chip payload the profile was measured at.
+    """
+
+    lat: dict[tuple[str, str], LatencyStats] = field(default_factory=dict)
+    size_bytes: float = 0.0
+
+    def get(self, axis: str, shape: str) -> "LatencyStats | None":
+        return self.lat.get((axis, shape))
+
+    def collective_s(
+        self, axis: str, shape: str, default: float | None = None
+    ) -> "float | None":
+        """Completion latency of one ``shape`` collective on ``axis``."""
+        st = self.lat.get((axis, shape))
+        return st.total_s if st is not None else default
+
+    def axis_shapes(self, axis: str) -> dict[str, LatencyStats]:
+        return {s: st for (a, s), st in sorted(self.lat.items()) if a == axis}
+
+    def merged(self, other: "LatencyProfile") -> "LatencyProfile":
+        return LatencyProfile(
+            lat={**self.lat, **other.lat},
+            size_bytes=other.size_bytes or self.size_bytes,
+        )
+
+
 def build_comm_model(
     topo: NDFullMesh | None = None,
     *,

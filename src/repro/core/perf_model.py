@@ -46,9 +46,12 @@ from typing import Protocol, runtime_checkable
 from .cost_model import (
     A2A_CALIBRATION_MAX_NODES,
     COLLECTIVE_SHAPES,
+    LATENCY_SHAPES,
     AxisCost,
     CalibrationProfile,
     CommModel,
+    LatencyProfile,
+    LatencyStats,
 )
 from .topology import NDFullMesh, SuperPod, ub_mesh_pod
 from .traffic import ParallelSpec
@@ -120,6 +123,17 @@ def _topo_key(topo: NDFullMesh) -> tuple:
 # unique (topology, axis, shape, group-width, routing, payload, latency, rx)
 # — the same key appears once whether the planner scores 10 specs or 1000
 _CALIBRATION_CACHE: dict[tuple, float] = {}
+
+# latency-mode sibling of the bandwidth memo: one message-level netsim
+# execution per unique (topology, routing, ..., "latency-mode", payload,
+# axis, shape, width) key, holding the full LatencyStats (p50/p99/mean/
+# total) rather than a scalar GB/s
+_LATENCY_CACHE: dict[tuple, LatencyStats] = {}
+
+# LatencyStats fields persisted per key in the disk store; each becomes a
+# ``(axis, f"{shape}@{field}", width)`` entry so the store's 3-part
+# ``axis|shape|width`` key format carries stats without a schema change
+_LATENCY_STAT_FIELDS = ("p50_s", "p99_s", "mean_s", "total_s", "n")
 
 # persistent-store handles per resolved cache directory (shares the
 # corrupt-file warn-once bookkeeping across NetsimPerfModel instances)
@@ -748,6 +762,140 @@ class NetsimPerfModel:
                         None if w >= self.superpod.n_pods else w
                     )
         return widths
+
+    def _latency_widths(
+        self, p: ParallelSpec | None
+    ) -> dict[tuple[str, str], int | None]:
+        """The latency-measurable subset of ``_widths(p)``: decode-regime
+        shapes only (``LATENCY_SHAPES``) on the chip-level axes — the HRS
+        "pod" tier lives on the coarse mesh, which the message-level
+        transport does not model."""
+        return {
+            (a, s): w
+            for (a, s), w in self._widths(p).items()
+            if s in LATENCY_SHAPES and a != "pod"
+        }
+
+    def _analytic_latency(
+        self, axis: str, shape: str, size_bytes: float
+    ) -> float:
+        """Closed-form alpha-beta time for shapes the topology cannot
+        host (fallback; flagged by ``n=0`` in the stats)."""
+        return getattr(self.base, shape)(axis, size_bytes)
+
+    def latency_profile(
+        self, p: ParallelSpec | None = None, *, size_bytes: float = 64e3
+    ) -> LatencyProfile:
+        """Measured message-level latency stats per (axis, shape) at a
+        decode-sized payload — the latency-mode sibling of
+        :meth:`calibration_profile`.
+
+        Each (axis, shape, width) key executes its collective DAG ONCE on
+        the message-level transport (``NetSim(message_level=True)``) and
+        is memoized in the shared ``_LATENCY_CACHE`` under the bandwidth
+        memo's ``key_base`` extended with a ``("latency-mode",
+        size_bytes)`` tag — so latency and bandwidth calibrations never
+        alias, while specs sharing a TP*SP / EP footprint share
+        measurements exactly as they do for GB/s.  Values persist through
+        the same ``core.calib_cache`` store (config = key_base + the
+        latency tag) with each ``LatencyStats`` field flattened to an
+        ``axis|shape@field|width`` entry.
+
+        Widths resolve from ``_widths(p)`` restricted to
+        ``LATENCY_SHAPES``, so the measured group is the spec's REAL
+        footprint: a tp*sp=64 plane group pays the full 2(w-1)-step ring
+        latency while a tp*sp=8 clique group pays ~1/8 of it — the
+        spec-dependence the analytic model's pinned axis size hides, and
+        the reason SLO-driven decode planning can disagree with
+        bandwidth-optimal planning."""
+        from ..netsim import NetSim  # deferred: core must not hard-require netsim
+
+        if self.failed_links:
+            raise ValueError(
+                "latency profiles run on the healthy mesh: message mode "
+                "does not model failure injection"
+            )
+        widths = self._latency_widths(p)
+        key_base, _coarse, _detail, _bg = self._tags()
+        tag = ("latency-mode", float(size_bytes))
+
+        def lkey(axis: str, shape: str, w: "int | None") -> tuple:
+            return key_base + tag + (axis, shape, w)
+
+        triples = [(a, s, w) for (a, s), w in widths.items()]
+        missing = {t for t in triples if lkey(*t) not in _LATENCY_CACHE}
+        _CALIBRATION_STATS["hits"] += len(triples) - len(missing)
+        _CALIBRATION_STATS["misses"] += len(missing)
+
+        # persistent read-through: a key hits only when every stat field
+        # is present (partial rows re-measure rather than mixing sources)
+        store_config = list(key_base + tag)
+        disk = self._disk_cache() if missing else None
+        if disk is not None:
+            stored = disk.get_profile(store_config)
+            for axis, shape, w in list(missing):
+                vals = {
+                    f: stored.get((axis, f"{shape}@{f}", w))
+                    for f in _LATENCY_STAT_FIELDS
+                }
+                if all(v is not None for v in vals.values()):
+                    _LATENCY_CACHE[lkey(axis, shape, w)] = LatencyStats(
+                        p50_s=vals["p50_s"],
+                        p99_s=vals["p99_s"],
+                        mean_s=vals["mean_s"],
+                        total_s=vals["total_s"],
+                        n=int(vals["n"]),
+                    )
+                    _CALIBRATION_STATS["disk_hits"] += 1
+                    missing.discard((axis, shape, w))
+
+        if missing:
+            sim = NetSim(
+                self.topo,
+                routing=self.base.routing,
+                latency_s=self.latency_s,
+                rx_gbs=self.rx_gbs,
+                reuse_wire_template=self.reuse_wire_template,
+                message_level=True,
+            )
+            new_entries: dict = {}
+            for axis, shape, w in sorted(missing, key=str):
+                _CALIBRATION_STATS["sessions"] += 1
+                _CALIBRATION_STATS["session_keys"] += 1
+                t0 = time.perf_counter()
+                prof = sim.measure_latency_profile(
+                    size_bytes,
+                    widths={(axis, shape): w},
+                    axes=(axis,),
+                    shapes=(shape,),
+                )
+                _record_measurement(
+                    axis, f"{shape}@lat", w, time.perf_counter() - t0
+                )
+                st = prof.get(axis, shape)
+                if st is None:
+                    t_an = self._analytic_latency(axis, shape, size_bytes)
+                    st = LatencyStats(
+                        p50_s=t_an, p99_s=t_an, mean_s=t_an,
+                        total_s=t_an, n=0,
+                    )
+                _LATENCY_CACHE[lkey(axis, shape, w)] = st
+                for f in _LATENCY_STAT_FIELDS:
+                    new_entries[(axis, f"{shape}@{f}", w)] = float(
+                        getattr(st, f)
+                    )
+            # persistent write-back (best-effort; never raises into
+            # planning)
+            if disk is not None and new_entries:
+                disk.update(store_config, new_entries)
+
+        return LatencyProfile(
+            lat={
+                (a, s): _LATENCY_CACHE[lkey(a, s, w)]
+                for (a, s), w in widths.items()
+            },
+            size_bytes=float(size_bytes),
+        )
 
     def calibration_profile(
         self, p: ParallelSpec | None = None

@@ -352,6 +352,39 @@ def enumerate_specs(
     return specs
 
 
+def enumerate_decode_specs(
+    w: WorkloadSpec,
+    chips: int,
+    *,
+    max_tp: int = 64,
+    hbm: float = HBM_BYTES,
+) -> list[ParallelSpec]:
+    """Feasible (tp, dp) shardings of ``chips`` for decode serving.
+
+    Decode inference has no gradients, optimizer shards or pipeline
+    microbatching to trade off: the factorization is TP (weight sharding
+    inside the rack plane) x DP (independent serving replicas), and the
+    only hard constraint is that the bf16 weight shard fits HBM.  The
+    interesting tension — maximum TP streams the smallest shard per step
+    but pays the widest collective latency per token — is priced by
+    ``launch.serve.decode_step_s``, not filtered here.
+    """
+    specs: list[ParallelSpec] = []
+    for tp in _divisors_pow2(chips, max_tp):
+        dp = chips // tp
+        if tp * dp != chips:
+            continue
+        if w.params_total * w.bytes_per_elem / tp > hbm:
+            continue
+        specs.append(
+            ParallelSpec(
+                tp=tp, sp=1, pp=1, dp=dp, ep=1,
+                microbatches=1, grad_buckets=1,
+            )
+        )
+    return specs
+
+
 def _prefilter_comm(perf: "PerfModel | CommModel") -> CommModel:
     """The spec-invariant analytic model the pre-filter prices against.
 

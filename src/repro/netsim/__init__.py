@@ -16,6 +16,12 @@ Module map (paper section -> module):
                     many-to-one bursts instead of resolving them instantly,
                     per-dim IO caps for switched tiers, and aggregate flows
                     carrying N symmetric ring-step members at once
+* ``messages``    — message-level store-and-forward latency mode
+                    (``NetSim(message_level=True)``): per-hop
+                    serialization, propagation and FIFO queueing under the
+                    same collective DAG compiler — the decode-serving
+                    regime where small-message latency, not bandwidth,
+                    dominates; feeds ``NetSim.measure_latency_profile``
 * ``solver``      — the max-min rate allocators: vectorized numpy
                     water-filling over an incremental group CSR (default)
                     and the pure-Python reference oracle
@@ -89,6 +95,11 @@ from .collectives import (                                 # noqa: F401
 )
 from .events import EventEngine                            # noqa: F401
 from .flows import FluidNetwork, default_rx_gbs            # noqa: F401
+from .messages import (                                    # noqa: F401
+    Message,
+    MessageDagRun,
+    MessageNetwork,
+)
 from .routing import Router, Transfer                      # noqa: F401
 from .scenarios import (                                   # noqa: F401
     TrunkCongestion,

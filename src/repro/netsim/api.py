@@ -30,8 +30,11 @@ import numpy as np
 from ..core.cost_model import (
     A2A_CALIBRATION_MAX_NODES,
     COLLECTIVE_SHAPES,
+    LATENCY_SHAPES,
     CalibrationProfile,
     CommModel,
+    LatencyProfile,
+    LatencyStats,
     Routing,
 )
 from ..core.topology import DimSpec, NDFullMesh, PASSIVE_ELECTRICAL, ub_mesh_pod
@@ -71,6 +74,9 @@ class NetSimResult:
     transfer_counts: dict[str, float] = field(default_factory=dict)
     incomplete: int = 0                            # tasks never finished
     failure_stats: dict = field(default_factory=dict)   # from Router.fail_link
+    # message-level runs only: per-task ready-to-complete latency
+    # (queueing-inclusive) — the raw samples behind a LatencyProfile
+    task_latency_s: dict[int, float] = field(default_factory=dict)
     # the run's Telemetry recorder when the NetSim was built with
     # ``telemetry=True`` (None otherwise; see netsim/telemetry.py)
     telemetry: "Telemetry | None" = None
@@ -204,6 +210,8 @@ class NetSim:
         telemetry: bool = False,
         reuse_wire_template: bool = True,
         failed_links: "tuple[tuple[int, int], ...]" = (),
+        message_level: bool = False,
+        dim_latency_s: dict[int, float] | None = None,
     ) -> None:
         self.topo = topo or ub_mesh_pod()
         self.routing = routing
@@ -253,6 +261,20 @@ class NetSim:
         # and batched calibration is disabled (a failure breaks the
         # translation symmetry relocation relies on).
         self.failed_links = tuple(tuple(l) for l in failed_links)
+        # message-level latency mode (netsim/messages.py): DAG tasks become
+        # store-and-forward messages — per-hop serialization + propagation +
+        # FIFO queueing replace both the fluid rate sharing AND the flat
+        # per-task launch delay.  Off (the default) leaves the fluid code
+        # path completely untouched: bit-identical to a sim built without
+        # the flag.  ``dim_latency_s`` optionally overrides the per-hop
+        # latency per topology dimension (default: ``latency_s`` flat).
+        self.message_level = message_level
+        self.dim_latency_s = dict(dim_latency_s or {})
+        if message_level and self.failed_links:
+            raise ValueError(
+                "message_level does not support failed_links: failure "
+                "injection and APR reroute are fluid-mode features"
+            )
         self.last_network: FluidNetwork | None = None   # post-run inspection
         self.last_telemetry: Telemetry | None = None
 
@@ -295,6 +317,12 @@ class NetSim:
         failure is injected (or the NetSim was built with
         ``aggregate=False``), in which case they expand into per-pair
         routed sends so APR rerouting stays per-flow."""
+        if self.message_level:
+            if fail_link is not None:
+                raise ValueError(
+                    "message_level does not support fail_link injection"
+                )
+            return self._run_dags_messages([dag], names=[name])[0]
         router = self._fresh()
         net = router.net
         use_agg = self.aggregate and fail_link is None and not self.failed_links
@@ -337,6 +365,8 @@ class NetSim:
         rack's trunk uplinks (``netsim/coarsen.mixed_calibrated_profile``).
         Returns one result per DAG in order; each result's utilization is
         the shared network's, averaged over that DAG's own makespan."""
+        if self.message_level:
+            return self._run_dags_messages(dags)
         router = self._fresh()
         net = router.net
         use_agg = self.aggregate and not self.failed_links
@@ -354,6 +384,94 @@ class NetSim:
             r.telemetry = net.telemetry      # shared network, shared recorder
             results.append(r)
         return results
+
+    # -- message-level (latency) runs --------------------------------------
+    def _run_dags_messages(
+        self, dags: "list[FlowDAG]", names: "list[str | None] | None" = None
+    ) -> list[NetSimResult]:
+        """Execute DAGs concurrently at message granularity
+        (``netsim/messages.py``): store-and-forward serialization +
+        per-hop propagation + FIFO queueing on the same wire inventory,
+        no fluid solver, no flat launch delay."""
+        from .messages import MessageDagRun, MessageNetwork
+
+        msgnet = MessageNetwork(
+            self.topo,
+            EventEngine(),
+            latency_s=self.latency_s,
+            dim_latency_s=self.dim_latency_s,
+            rx_gbs=self.rx_gbs,
+            reuse_wire_template=self.reuse_wire_template,
+        )
+        runs = [MessageDagRun(msgnet, dag) for dag in dags]
+        for run in runs:
+            run.start()
+        msgnet.engine.run()
+        results = []
+        for i, (dag, run) in enumerate(zip(dags, runs)):
+            makespan = max(run.end_s.values(), default=0.0)
+            name = names[i] if names else None
+            results.append(NetSimResult(
+                name=name or dag.name,
+                makespan_s=makespan,
+                task_end_s=dict(run.end_s),
+                link_utilization=msgnet.utilization(makespan or None),
+                bytes_delivered=sum(
+                    dag.tasks[tid].total_bytes for tid in run.end_s
+                ),
+                events=msgnet.engine.events_fired,
+                incomplete=len(dag.tasks) - len(run.end_s),
+                task_latency_s=run.task_latency_s,
+            ))
+        return results
+
+    def measure_latency_profile(
+        self,
+        size_bytes: float = 64e3,
+        *,
+        widths: "dict | None" = None,
+        axes: tuple[str, ...] | None = None,
+        shapes: tuple[str, ...] = LATENCY_SHAPES,
+    ) -> LatencyProfile:
+        """Per-``(axis, shape)`` message-level latency statistics at a
+        decode-sized payload — the latency-side sibling of
+        :meth:`calibrated_profile`.
+
+        Each shape's OWN collective DAG (the same builders the bandwidth
+        calibration uses) is executed at message granularity regardless of
+        this sim's ``message_level`` flag: per-hop serialization +
+        propagation + FIFO link/ejection queueing.  Per entry:
+        ``total_s`` is the collective's completion time and p50/p99 the
+        distribution of per-task ready-to-delivery latencies within the
+        run — incast queueing gives the A2A dispatch a heavy p99 tail
+        while the fluid model would price every task at one flat
+        ``latency_s``.  ``widths`` narrows measurement groups exactly as
+        in :meth:`calibrated_profile` (the planner's TP*SP / EP
+        footprints); memoization lives in
+        ``core.perf_model.NetsimPerfModel.latency_profile``."""
+        axis_dims = self._axis_dims_map(axes)
+        lat: dict[tuple[str, str], LatencyStats] = {}
+        for axis, dims in axis_dims.items():
+            for shape in shapes:
+                if shape not in LATENCY_SHAPES:
+                    raise ValueError(
+                        f"latency profiles cover {LATENCY_SHAPES}, "
+                        f"got {shape!r}"
+                    )
+                dag = self._axis_shape_dag(
+                    dims, shape, size_bytes,
+                    self._width_of(widths, axis, shape),
+                    tag=f"lat-{axis}-{shape}",
+                )
+                if dag is None or not dag.tasks:
+                    continue
+                res = self._run_dags_messages([dag])[0]
+                if res.makespan_s <= 0:
+                    continue
+                lat[(axis, shape)] = LatencyStats.from_samples(
+                    sorted(res.task_latency_s.values()), res.makespan_s
+                )
+        return LatencyProfile(lat=lat, size_bytes=float(size_bytes))
 
     def allreduce_time(
         self, dim: int, size_bytes: float, *, fixed: dict[int, int] | None = None

@@ -76,7 +76,13 @@ class EventEngine:
 
     def run(self, until: float | None = None, max_events: int = 10_000_000) -> float:
         """Drain the queue (or up to virtual time ``until``).  Returns the
-        final virtual time."""
+        final virtual time.
+
+        ``max_events`` is a hard budget: at most that many events fire, and
+        the error raises *before* the budget-busting event runs.  When
+        ``until`` is given, ``now`` always lands exactly on ``until`` —
+        including when the queue drains early — so back-to-back
+        ``run(until=...)`` windows tile virtual time without gaps."""
         fired = 0
         while self._heap:
             nxt = self._peek_time()
@@ -85,11 +91,13 @@ class EventEngine:
             if until is not None and nxt > until:
                 self.now = until
                 return self.now
+            if fired >= max_events:
+                raise RuntimeError(f"event budget exceeded ({max_events})")
             if not self.step():
                 break
             fired += 1
-            if fired > max_events:
-                raise RuntimeError(f"event budget exceeded ({max_events})")
+        if until is not None and self.now < until:
+            self.now = until
         return self.now
 
     def _peek_time(self) -> float | None:

@@ -186,3 +186,84 @@ class TestGoldenAvailability:
         )
         # the 64+1 backup + reroute story: Clos's restart tax at scale
         assert clos["linearity"] < lin["linearity"] - 0.05
+
+
+# Message-level latency goldens (one 8x8 rack, DETOUR, 64 KB decode
+# payload, 1 us/hop): the decode-serving regime the SLO planner prices.
+# The plane-wide AllReduce's 126.7 us vs the 8-clique's 15.2 us is the
+# 2(w-1)-step width scaling that makes bandwidth-optimal and SLO-optimal
+# decode shardings diverge.
+MSG_P2P_64KB_US = 3.56               # exactly size/cap + latency
+MSG_RING_AR_8CLIQUE_64KB_US = 15.154
+MSG_PLANE_AR_64KB_US = 126.72
+MSG_A2A_TOTAL_64KB_US = 3.29
+MSG_A2A_P99_64KB_US = 1.96
+
+
+class TestGoldenMessageLatency:
+    """Message-level engine pins: closed-form alpha-beta agreement on
+    uncongested paths plus absolute latency-profile goldens."""
+
+    @pytest.fixture(scope="class")
+    def rack_profile(self):
+        from repro.core.topology import ub_mesh_rack
+
+        sim = NetSim(ub_mesh_rack(), routing=Routing.DETOUR)
+        return sim, sim.measure_latency_profile(64e3)
+
+    def test_p2p_matches_closed_form(self, rack_profile):
+        # one X-dim hop: serialization at the 4-lane 25 GB/s link plus
+        # one propagation latency, nothing else — exact, not just <= 2%
+        sim, prof = rack_profile
+        from repro.netsim.flows import _wire_structure
+
+        cap, _ = _wire_structure(sim.topo)
+        closed = 64e3 / cap[(0, 1)] + sim.latency_s
+        assert prof.get("model", "p2p").total_s == pytest.approx(
+            closed, rel=1e-9
+        )
+        assert closed * 1e6 == pytest.approx(MSG_P2P_64KB_US, rel=GOLDEN_REL)
+
+    def test_ring_allreduce_matches_alpha_beta(self, rack_profile):
+        # uncongested 8-clique multi-ring: per dependency-chain step the
+        # message engine pays chunk/cap + latency, which is exactly the
+        # fluid model's launch-latency + wire-time alpha-beta cost — the
+        # two engines must agree within the golden band
+        sim, _ = rack_profile
+        prof8 = sim.measure_latency_profile(
+            64e3, widths={("model", "allreduce"): 8},
+        )
+        msg_t = prof8.get("model", "allreduce").total_s
+        from repro.netsim.collectives import clique_nodes, ring_allreduce
+
+        ring = ring_allreduce(
+            sim.topo, clique_nodes(sim.topo, 0), 64e3, tag="golden-ring"
+        )
+        fluid_t = sim.run_dag(ring).makespan_s
+        assert msg_t == pytest.approx(fluid_t, rel=GOLDEN_REL)
+        assert msg_t * 1e6 == pytest.approx(
+            MSG_RING_AR_8CLIQUE_64KB_US, rel=GOLDEN_REL
+        )
+
+    def test_plane_allreduce_width_scaling(self, rack_profile):
+        _, prof = rack_profile
+        total = prof.get("model", "allreduce").total_s
+        assert total * 1e6 == pytest.approx(
+            MSG_PLANE_AR_64KB_US, rel=GOLDEN_REL
+        )
+        # the SLO-divergence mechanism: the full 64-chip plane costs ~8x
+        # the 8-clique per collective at decode payloads
+        assert total > 5 * MSG_RING_AR_8CLIQUE_64KB_US / 1e6
+
+    def test_a2a_incast_tail(self, rack_profile):
+        _, prof = rack_profile
+        a2a = prof.get("model", "all_to_all")
+        assert a2a.total_s * 1e6 == pytest.approx(
+            MSG_A2A_TOTAL_64KB_US, rel=GOLDEN_REL
+        )
+        assert a2a.p99_s * 1e6 == pytest.approx(
+            MSG_A2A_P99_64KB_US, rel=GOLDEN_REL
+        )
+        # queueing behind links/ejection ports: a real tail, which the
+        # fluid model's single flat launch latency cannot produce
+        assert a2a.p99_s > a2a.p50_s

@@ -61,6 +61,35 @@ class TestEventEngine:
         with pytest.raises(ValueError):
             eng.schedule_at(0.5, lambda: None)
 
+    def test_budget_raises_before_excess_event_fires(self):
+        # the guard must trip BEFORE event max_events+1 runs: exactly
+        # max_events callbacks fire, the raise preempts the next one
+        eng = EventEngine()
+        fired = []
+        for i in range(5):
+            eng.schedule(float(i + 1), lambda i=i: fired.append(i))
+        with pytest.raises(RuntimeError, match="event budget"):
+            eng.run(max_events=3)
+        assert fired == [0, 1, 2]
+        assert eng.events_fired == 3
+
+    def test_until_advances_now_when_queue_drains_early(self):
+        # run(until=T) with the last event before T must still land now
+        # exactly on T, so back-to-back windows tile virtual time
+        eng = EventEngine()
+        eng.schedule(0.25, lambda: None)
+        assert eng.run(until=1.0) == 1.0
+        assert eng.now == 1.0
+        # an empty queue behaves the same
+        assert eng.run(until=2.0) == 2.0
+        assert eng.now == 2.0
+        # and a future event past the window is untouched
+        fired = []
+        eng.schedule_at(5.0, lambda: fired.append("x"))
+        assert eng.run(until=3.0) == 3.0
+        assert not fired
+        assert eng.pending == 1
+
 
 class TestFairShare:
     def test_single_flow_gets_full_link(self):
